@@ -1,0 +1,83 @@
+"""Fig. 9/10: DCO-accelerated index construction + post-build search parity.
+
+Classification methods are excluded (they need an index to train — paper
+§V-D).  IVF construction DCOs are the per-vector assignment top-1 searches
+(method fitted on the CENTROIDS, base rows act as queries); every method —
+including FDScanning — runs through the same staged-scan loop so the
+comparison isolates the DCO, exactly as the paper's unified framework does.
+HNSW construction runs on a reduced slice (host graph)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import dataset, emit, fmt3, method_for, run_queries
+from repro.core.engine import ScanStats, make_schedule
+from repro.core.methods import make_method
+from repro.search.hnsw import HNSWIndex
+from repro.search.ivf import IVFIndex, _kmeans_assign
+from repro.vecdata import load_dataset
+from repro.vecdata.synthetic import recall_at_k
+
+METHODS = ("FDScanning", "PDScanning", "PDScanning+", "ADSampling", "DADE",
+           "DDCres")
+K = 10
+
+
+def ivf_construction():
+    for ds_name in ("glove", "gist", "openai"):
+        ds = dataset(ds_name)
+        # shared centroids (identical final layout for all methods — App. A)
+        proto = IVFIndex(n_list=64).build(ds.X)
+        cents = proto.centroids
+        n_assign = min(ds.n, 4000)              # assignment slice to time
+        sched = make_schedule(ds.dim, delta0=16, delta_d=32, max_stages=3)
+        base_t = None
+        for name in METHODS:
+            cm = make_method(name).fit(cents)   # method scans CENTROIDS
+            stats = ScanStats()
+            t0 = time.perf_counter()
+            _kmeans_assign(ds.X[:n_assign], cents, method=cm, schedule=sched,
+                           stats=stats)
+            build_t = time.perf_counter() - t0
+            if base_t is None:
+                base_t = build_t
+            m = method_for(ds, "FDScanning", k=K)
+            qps, rec, _, _ = run_queries(ds, m, proto, k=K, nq=8)
+            emit(f"construct_ivf/{ds_name}/{name}", 1e6 * build_t / n_assign,
+                 assign_s=fmt3(build_t), speedup=fmt3(base_t / build_t),
+                 prune=fmt3(stats.pruning_ratio), post_recall=fmt3(rec))
+
+
+def hnsw_construction():
+    ds = load_dataset("gist", scale=0.06)       # ~1.8k vectors
+    sched = make_schedule(ds.dim, delta0=32, delta_d=64)
+    base_t = None
+    for name in METHODS:
+        m = make_method(name).fit(ds.X)
+        stats = ScanStats()
+        t0 = time.perf_counter()
+        idx = HNSWIndex(m=8, ef_construction=32).build(ds.X, method=m,
+                                                       schedule=sched,
+                                                       stats=stats)
+        build_t = time.perf_counter() - t0
+        if base_t is None:
+            base_t = build_t
+        ctx = m.prep_queries(ds.Q[:10])
+        gt, _ = ds.ground_truth(K)
+        found = [idx.search(m, ctx, qi, K, ef=48, schedule=sched)[1]
+                 for qi in range(10)]
+        rec = recall_at_k(np.array(found), gt[:10])
+        emit(f"construct_hnsw/gist/{name}", 1e6 * build_t,
+             build_s=fmt3(build_t), speedup=fmt3(base_t / build_t),
+             prune=fmt3(stats.pruning_ratio), search_recall=fmt3(rec))
+
+
+def main():
+    ivf_construction()
+    hnsw_construction()
+
+
+if __name__ == "__main__":
+    main()

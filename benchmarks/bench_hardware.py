@@ -1,0 +1,98 @@
+"""Fig. 13: hardware/execution-model sensitivity.
+
+The paper's axis is CPU-SIMD-off / CPU-SIMD-on / GPU.  The analogous axis in
+this framework:
+  scalar   — pure-Python per-dimension loop (SIMD-off analogue)
+  batched  — numpy vectorized staged scan (SIMD-on analogue)
+  device   — jit'd two-stage batched engine, per-query-batch prep
+             (TPU execution model; runs on CPU backend here, and its roofline
+             on the production mesh is in EXPERIMENTS.md §Roofline)
+
+Validates Takeaway #6: the ranking of methods flips across execution models —
+e.g. early-exit wins scalar, loses batched."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, fmt3
+from repro.core.engine import make_schedule, scan_topk
+from repro.core.methods import make_method
+from repro.vecdata import load_dataset
+from repro.vecdata.synthetic import recall_at_k
+
+K = 10
+
+
+def scalar_scan(m, ctx, qi, X, tau_sq, schedule):
+    """Per-vector, per-stage Python loop — the no-SIMD analogue."""
+    Xr = m.state.get("Xrot", m.state["X"])
+    qr = ctx.get("Qrot", ctx["Q"])[qi]
+    survivors = 0
+    for row in range(X.shape[0]):
+        partial = 0.0
+        pruned = False
+        for d in schedule:
+            seg = Xr[row, :d] - qr[:d]
+            partial = float(seg @ seg)
+            keep, _ = m.screen(np.array([row]), ctx, qi, d, tau_sq)
+            if not keep[0]:
+                pruned = True
+                break
+        if not pruned:
+            survivors += 1
+    return survivors
+
+
+def main():
+    for ds_name in ("sift", "gist"):
+        ds = load_dataset(ds_name, scale=0.05)
+        sched = make_schedule(ds.dim)
+        gt, gtd = ds.ground_truth(K)
+        sub = np.arange(min(ds.n, 400))           # scalar loop slice
+        for name in ("FDScanning", "PDScanning", "PDScanning+", "ADSampling",
+                     "DDCres"):
+            m = make_method(name).fit(ds.X)
+            ctx = m.prep_queries(ds.Q[:4])
+            tau = float(gtd[0, -1])
+            # scalar
+            t0 = time.perf_counter()
+            scalar_scan(m, ctx, 0, ds.X[sub], tau, m.stage_dims(sched) or [ds.dim])
+            t_scalar = time.perf_counter() - t0
+            # batched numpy
+            t0 = time.perf_counter()
+            for qi in range(4):
+                scan_topk(m, ctx, qi, np.arange(ds.n), K, sched)
+            t_batch = (time.perf_counter() - t0) / 4
+            emit(f"hardware/{ds_name}/{name}", 1e6 * t_batch,
+                 scalar_us_per_vec=fmt3(1e6 * t_scalar / len(sub)),
+                 batched_us_per_vec=fmt3(1e6 * t_batch / ds.n),
+                 simd_analog_speedup=fmt3((t_scalar / len(sub))
+                                          / (t_batch / ds.n)))
+
+    # device (jit two-stage) model on one dataset
+    import jax.numpy as jnp
+    from repro.core.jax_engine import (DcoEngineConfig, build_device_state,
+                                       two_stage_topk)
+    ds = load_dataset("gist", scale=0.2)
+    m = make_method("PDScanning+").fit(ds.X)
+    cfg = DcoEngineConfig(kind="lb", d1=128, k=K, capacity=1024, query_chunk=8)
+    state = build_device_state(m, cfg.d1)
+    W = jnp.asarray(m.state["pca"]["W"])
+    Q = jnp.asarray(ds.Q[:16]) @ W
+    args = (state, Q[:, :cfg.d1], Q[:, cfg.d1:], cfg)
+    d, i, s = two_stage_topk(*args)                # compile
+    t0 = time.perf_counter()
+    for _ in range(3):
+        d, i, s = two_stage_topk(*args)
+        d.block_until_ready()
+    dt = (time.perf_counter() - t0) / 3 / 16
+    gt, _ = ds.ground_truth(K)
+    rec = recall_at_k(np.array(i), gt[:16])
+    emit("hardware/gist/device_two_stage", 1e6 * dt,
+         recall=fmt3(rec), survivors_mean=fmt3(float(np.mean(np.array(s)))))
+
+
+if __name__ == "__main__":
+    main()

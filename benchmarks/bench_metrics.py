@@ -1,0 +1,37 @@
+"""Fig. 8 + App. E: inner product & cosine via the Eq. 8 transform.
+
+All methods run on the normalized dataset; IP/cosine top-k == L2 top-k there,
+so QPS-recall curves mirror the Euclidean ones (Takeaway #3)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (SCALES, emit, fmt3, method_for, run_queries)
+from repro.core.methods import ALL_METHODS
+from repro.search.ivf import IVFIndex
+from repro.vecdata import load_dataset
+
+DATASETS = ("glove", "gist", "openai")
+K = 10
+
+
+def main():
+    for ds_name in DATASETS:
+        base = load_dataset(ds_name, scale=SCALES.get(ds_name, 0.3))
+        ds = base.normalized()          # Eq. 8: IP == 1 - 0.5 d2 on unit norm
+        idx = IVFIndex(n_list=64).build(ds.X)
+        for name in ALL_METHODS:
+            m = method_for(ds, name, k=K)
+            qps, rec, stats, us = run_queries(ds, m, idx, k=K, nq=12)
+            # verify the transform: L2 top-1 == IP top-1 for a sample query
+            q = ds.Q[0]
+            ip_top = int(np.argmax(ds.X @ q))
+            l2_top = int(np.argmin(((ds.X - q) ** 2).sum(1)))
+            emit(f"metric_ip/{ds_name}/{name}", us,
+                 qps=f"{qps:.1f}", recall=fmt3(rec),
+                 prune=fmt3(stats.pruning_ratio),
+                 ip_l2_top1_agree=int(ip_top == l2_top))
+
+
+if __name__ == "__main__":
+    main()

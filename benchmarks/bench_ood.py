@@ -1,0 +1,30 @@
+"""Fig. 7: in-distribution vs out-of-distribution queries (multimodal).
+
+Validates finding (2): pruning collapses and SOTA QPS degrades on OOD."""
+from __future__ import annotations
+
+from benchmarks.common import dataset, emit, fmt3, ivf_for, method_for, run_queries
+from repro.core.methods import ALL_METHODS
+
+DATASETS = ("text2image", "laion")
+K = 10
+
+
+def main():
+    for ds_name in DATASETS:
+        ds = dataset(ds_name)
+        idx = ivf_for(ds)
+        for name in ALL_METHODS:
+            m = method_for(ds, name, k=K)
+            qps_in, rec_in, st_in, us_in = run_queries(ds, m, idx, k=K, nq=12)
+            qps_ood, rec_ood, st_ood, us_ood = run_queries(
+                ds, m, idx, k=K, nq=12, queries=ds.Q_ood)
+            emit(f"ood/{ds_name}/{name}", us_ood,
+                 qps_in=f"{qps_in:.1f}", qps_ood=f"{qps_ood:.1f}",
+                 recall_in=fmt3(rec_in), recall_ood=fmt3(rec_ood),
+                 prune_in=fmt3(st_in.pruning_ratio),
+                 prune_ood=fmt3(st_ood.pruning_ratio))
+
+
+if __name__ == "__main__":
+    main()

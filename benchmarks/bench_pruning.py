@@ -1,0 +1,26 @@
+"""Fig. 6: dimension pruning ratio + recall across dimensionality.
+
+Validates: pruning is dimension-dependent; recall stays ~native."""
+from __future__ import annotations
+
+from benchmarks.common import dataset, emit, fmt3, ivf_for, method_for, run_queries
+from repro.core.methods import ALL_METHODS
+
+DATASETS = ("deep", "gist", "openai")
+K = 10
+
+
+def main():
+    for ds_name in DATASETS:
+        ds = dataset(ds_name)
+        idx = ivf_for(ds)
+        for name in ALL_METHODS:
+            m = method_for(ds, name, k=K)
+            qps, rec, stats, us = run_queries(ds, m, idx, k=K, nq=12)
+            emit(f"pruning/{ds_name}/{name}", us,
+                 prune=fmt3(stats.pruning_ratio), recall=fmt3(rec),
+                 dco_true_frac=fmt3(stats.n_true / max(stats.n_dco, 1)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Fig. 4/5: query QPS-recall across datasets x all 8 DCO methods (IVF).
+
+Validates finding (1): SOTA DCOs win at moderate D, lose at low D (deep,
+glove) and at ultra-high D (trevi, xultra) where the O(D^2) per-query
+rotation dominates.
+"""
+from __future__ import annotations
+
+from benchmarks.common import (dataset, emit, fmt3, ivf_for, method_for,
+                               run_queries)
+from repro.core.methods import ALL_METHODS
+
+DATASETS = ("deep", "glove", "sift", "gist", "openai", "trevi", "xultra")
+K = 10
+
+
+def main():
+    for ds_name in DATASETS:
+        ds = dataset(ds_name)
+        idx = ivf_for(ds)
+        base_qps = None
+        for name in ALL_METHODS:
+            m = method_for(ds, name, k=K)
+            qps, rec, stats, us = run_queries(ds, m, idx, k=K, nq=15)
+            if name == "FDScanning":
+                base_qps = qps
+            emit(f"query/{ds_name}/{name}", us,
+                 qps=f"{qps:.1f}", recall=fmt3(rec),
+                 prune=fmt3(stats.pruning_ratio),
+                 speedup_vs_fd=fmt3(qps / base_qps))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Fig. 4 on the paper's actual CPU index (HNSW), reduced scale.
+
+Optional suite (not in the default run list — host-graph builds are slow on
+1 core):  PYTHONPATH=src python -m benchmarks.run --only query_hnsw
+
+Scale caveat (EXPERIMENTS.md §Repro note): at ~2k vectors each HNSW hop
+screens a <=16-candidate batch, so fixed per-stage costs dominate and
+FDScanning wins across the board — the paper's own App. G observation
+("HNSW candidates are close to the query => weak pruning") taken to the
+extreme.  The paper's HNSW wins appear at 1M+ vectors; our IVF suite
+(bench_query) carries the at-scale comparison in this container.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, fmt3
+from repro.core.engine import ScanStats, make_schedule
+from repro.core.methods import make_method
+from repro.search.hnsw import HNSWIndex
+from repro.vecdata import load_dataset
+from repro.vecdata.synthetic import recall_at_k
+
+K = 10
+METHODS = ("FDScanning", "PDScanning", "PDScanning+", "ADSampling", "DADE",
+           "DDCres")
+
+
+def main():
+    for ds_name, scale in (("sift", 0.03), ("gist", 0.08)):
+        ds = load_dataset(ds_name, scale=scale)
+        sched = make_schedule(ds.dim)
+        # one shared graph (built with FDScanning; layout identical — App. A)
+        base_m = make_method("FDScanning").fit(ds.X)
+        idx = HNSWIndex(m=8, ef_construction=48).build(ds.X, method=base_m,
+                                                       schedule=sched)
+        gt, _ = ds.ground_truth(K)
+        base_qps = None
+        for name in METHODS:
+            m = make_method(name).fit(ds.X)
+            stats = ScanStats()
+            found = []
+            t0 = time.perf_counter()
+            for qi in range(15):
+                ctx = m.prep_queries(ds.Q[qi:qi + 1])
+                _, ids = idx.search(m, ctx, 0, K, ef=64, schedule=sched,
+                                    stats=stats)
+                found.append(ids)
+            qps = 15 / (time.perf_counter() - t0)
+            rec = recall_at_k(np.array(found), gt[:15])
+            if base_qps is None:
+                base_qps = qps
+            emit(f"query_hnsw/{ds_name}/{name}", 1e6 / qps,
+                 qps=f"{qps:.1f}", recall=fmt3(rec),
+                 prune=fmt3(stats.pruning_ratio),
+                 speedup_vs_fd=fmt3(qps / base_qps))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Fig. 11/12: dynamic inserts + limited-initial-data sensitivity.
+
+Fig. 11: 60% base HNSW build, 40% inserted in 4 batches — per-batch QPS,
+recall, cumulative update time per method (transforms fitted ONCE on the
+base set; inserts use `append`, never refit — the paper's dynamic setting).
+Fig. 12: methods fitted on 1% / 5% / 100% of the data — pruning + recall."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, fmt3
+from repro.core.engine import ScanStats, make_schedule
+from repro.core.methods import make_method
+from repro.search.hnsw import HNSWIndex
+from repro.vecdata import load_dataset
+from repro.vecdata.synthetic import recall_at_k
+
+METHODS = ("FDScanning", "PDScanning", "PDScanning+", "ADSampling", "DADE",
+           "DDCres")
+K = 10
+
+
+def dynamic_inserts():
+    ds = load_dataset("gist", scale=0.05)          # 1.5k vectors
+    n_base = int(ds.n * 0.6)
+    sched = make_schedule(ds.dim, delta0=32, delta_d=64)
+    batches = np.array_split(np.arange(n_base, ds.n), 4)
+    for name in METHODS:
+        m = make_method(name).fit(ds.X[:n_base])
+        idx = HNSWIndex(m=8, ef_construction=32).build(ds.X[:n_base], method=m,
+                                                       schedule=sched)
+        total_update = 0.0
+        for bi, ids in enumerate(batches):
+            t0 = time.perf_counter()
+            idx.insert_batch(m, ds.X[ids], schedule=sched)
+            total_update += time.perf_counter() - t0
+        # search after all inserts
+        ctx = m.prep_queries(ds.Q[:10])
+        t0 = time.perf_counter()
+        found = [idx.search(m, ctx, qi, K, ef=48, schedule=sched)[1]
+                 for qi in range(10)]
+        qps = 10 / (time.perf_counter() - t0)
+        gt, _ = ds.ground_truth(K)
+        rec = recall_at_k(np.array(found), gt[:10])
+        emit(f"updates_insert/gist/{name}", 1e6 * total_update,
+             update_s=fmt3(total_update), qps=f"{qps:.1f}", recall=fmt3(rec))
+
+
+def limited_initial_data():
+    ds = load_dataset("gist", scale=0.2)            # 6k vectors
+    sched = make_schedule(ds.dim)
+    gt, gtd = ds.ground_truth(K)
+    for frac in (0.01, 0.05, 1.0):
+        n_fit = max(64, int(ds.n * frac))
+        for name in ("PDScanning+", "DADE", "DDCres", "DDCpca", "DDCopq"):
+            m = make_method(name).fit(ds.X[:n_fit])
+            m.append(ds.X[n_fit:])
+            if m.needs_training:
+                rng = np.random.default_rng(3)
+                m.train(ds.X[rng.choice(n_fit, min(16, n_fit))], K, sched)
+            ctx = m.prep_queries(ds.Q[:10])
+            stats = ScanStats()
+            from repro.core.engine import scan_topk
+            found = []
+            for qi in range(10):
+                _, ids = scan_topk(m, ctx, qi, np.arange(ds.n), K, sched,
+                                   stats=stats)
+                found.append(ids)
+            rec = recall_at_k(np.array(found), gt[:10])
+            emit(f"updates_limited/gist/{name}/fit{frac}", 0.0,
+                 fit_frac=frac, recall=fmt3(rec),
+                 prune=fmt3(stats.pruning_ratio))
+
+
+def main():
+    dynamic_inserts()
+    limited_initial_data()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Shared benchmark plumbing: dataset/method caches, timing, CSV convention.
+
+Output convention (benchmarks/run.py): every row is
+    name,us_per_call,derived
+where ``derived`` carries the figure-specific metric (recall, pruning ratio,
+speedup, ...) as ``key=value|key=value``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import transforms as T
+from repro.core.engine import ScanStats, make_schedule, scan_topk
+from repro.core.methods import ALL_METHODS, make_method
+from repro.search.ivf import IVFIndex
+from repro.vecdata import load_dataset
+from repro.vecdata.synthetic import recall_at_k
+
+# CPU-feasible scales per dataset family (keeps every figure < ~2 min)
+SCALES = {"deep": 0.15, "glove": 0.3, "sift": 0.3, "text2image": 0.2,
+          "laion": 0.4, "wikipedia": 0.4, "gist": 0.5, "openai": 0.5,
+          "trevi": 0.5, "xultra": 0.5}
+
+_PCA_CACHE: dict = {}
+_METHOD_CACHE: dict = {}
+_IVF_CACHE: dict = {}
+
+
+def dataset(name):
+    return load_dataset(name, scale=SCALES.get(name, 0.3))
+
+
+def shared_pca(ds):
+    if ds.name not in _PCA_CACHE:
+        _PCA_CACHE[ds.name] = T.fit_pca(ds.X)
+    return _PCA_CACHE[ds.name]
+
+
+def method_for(ds, name, k=10, schedule=None, **params):
+    key = (ds.name, name, k)
+    if key in _METHOD_CACHE:
+        return _METHOD_CACHE[key]
+    if name in ("PDScanning+", "DADE", "DDCres", "DDCpca"):
+        params.setdefault("pca", shared_pca(ds))
+    if name == "DDCopq":
+        params.setdefault("n_sub", 8)
+        params.setdefault("n_codes", 128)
+    m = make_method(name, **params).fit(ds.X)
+    if m.needs_training:
+        rng = np.random.default_rng(7)
+        m.train(ds.X[rng.choice(ds.n, 24)], k,
+                schedule or make_schedule(ds.dim))
+    _METHOD_CACHE[key] = m
+    return m
+
+
+def ivf_for(ds, n_list=64):
+    if ds.name not in _IVF_CACHE:
+        _IVF_CACHE[ds.name] = IVFIndex(n_list=n_list).build(ds.X)
+    return _IVF_CACHE[ds.name]
+
+
+def run_queries(ds, m, idx, *, k=10, nprobe=16, nq=20, schedule=None,
+                queries=None, per_query_prep=True):
+    """Returns (qps, recall, stats, us_per_query) including the paper's
+    per-query online pre-processing cost (prep batch of 1)."""
+    Q = ds.Q[:nq] if queries is None else queries[:nq]
+    schedule = schedule or make_schedule(ds.dim)
+    stats = ScanStats()
+    found = []
+    t0 = time.perf_counter()
+    for qi in range(len(Q)):
+        if per_query_prep:
+            ctx = m.prep_queries(Q[qi:qi + 1])
+            d, ids = idx.search(m, ctx, 0, Q[qi], k, nprobe, schedule, stats)
+        else:
+            ctx = m.prep_queries(Q)
+            d, ids = idx.search(m, ctx, qi, Q[qi], k, nprobe, schedule, stats)
+        found.append(ids)
+    dt = time.perf_counter() - t0
+    gt, _ = ds.ground_truth(k, ood=queries is not None)
+    rec = recall_at_k(np.array(found), gt[:len(Q)])
+    return len(Q) / dt, rec, stats, 1e6 * dt / len(Q)
+
+
+def emit(name, us, **derived):
+    d = "|".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{name},{us:.1f},{d}", flush=True)
+
+
+def fmt3(x):
+    return f"{x:.3f}"

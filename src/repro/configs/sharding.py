@@ -1,0 +1,131 @@
+"""Sharding rules: param/batch/cache PartitionSpecs with divisibility fallbacks.
+
+Scheme (DESIGN.md §4):
+  * dense 2D weights: P(fsdp, "model") — FSDP over the data axes on d_in,
+    tensor parallel over "model" on d_out (row-parallel matrices transposed);
+  * MoE expert stacks (E, D, F): experts over "model" (EP), d_model over the
+    DP axes (FSDP) — matching models.moe's shard_map in_specs;
+  * vocab over "model" for embed / lm_head;
+  * batch over the DP axes; long-context (batch < dp) shards the KV-cache
+    sequence axis over the DP axes instead (flash-decoding style).
+
+Every rule passes through ``_maybe``: an axis is only used when the dim is
+divisible by the mesh axis product, otherwise that dim replicates — this is
+what absorbs starcoder2's 36 heads or mamba2's 3352-wide in_proj on a
+16-way TP axis without special cases.
+"""
+from __future__ import annotations
+
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _axsize(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _maybe(mesh, dim, axes):
+    """axes if dim divides evenly, else None (replicate)."""
+    return axes if (axes and dim % _axsize(mesh, axes) == 0) else None
+
+
+# trailing-dims rules per leaf name: entries are "axes for that trailing dim"
+# (None = replicate).  fsdp -> DP axes; tp -> "model".
+_RULES = {
+    # name: (trailing rank, per-dim axes) where 'F' = fsdp, 'T' = tp
+    "embed":    ("T", "F"),
+    "lm_head":  ("F", "T"),
+    "wq": ("F", "T"), "wk": ("F", "T"), "wv": ("F", "T"), "wo": ("T", "F"),
+    "wg": ("F", "T"), "wu": ("F", "T"), "wd": ("T", "F"),
+    "w1": ("F", "T"), "w2": ("T", "F"),
+    "wq_a": ("F", "T"), "wq_b": ("F", "T"),
+    "wkv_a": ("F", "T"), "wk_b": ("F", "T"), "wv_b": ("F", "T"),
+    "in_proj": ("F", "T"), "out_proj": ("T", "F"),
+    "proj": ("F", "T"),
+    "router": ("F", None),
+    "conv_w": (None, None),
+}
+
+# MoE expert tensors (inside a params dict keyed 'moe' or hybrid group 'moe'):
+# (E, D, F) / (E, F, D) — expert dim on TP, d_model dim on FSDP.
+_MOE_RULES = {
+    "wg": ("T", "F", None),
+    "wu": ("T", "F", None),
+    "wd": ("T", None, "F"),
+    "router": ("F", None),     # (D, E): FSDP on d_model; gathered per layer
+}
+
+
+def _resolve(mesh, shape, rule, fsdp, tp):
+    spec = [None] * len(shape)
+    k = len(rule)
+    for i, r in enumerate(rule):
+        dim_idx = len(shape) - k + i
+        if dim_idx < 0:
+            continue
+        axes = {"F": fsdp, "T": tp, None: None}[r]
+        spec[dim_idx] = _maybe(mesh, shape[dim_idx], axes)
+    return P(*spec)
+
+
+def param_specs(params, mesh, *, fsdp=("data",), tp="model"):
+    """Pytree of PartitionSpec matching ``params`` (works on shapes or
+    arrays).  Leading stacked-layer dims are left replicated."""
+    import jax
+
+    def walk(tree, path):
+        if tree is None:                    # e.g. non-parametric norms (olmo)
+            return None
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        if isinstance(tree, (tuple, list)):
+            return type(tree)(walk(v, path + (str(i),)) for i, v in enumerate(tree))
+        shape = tree.shape if hasattr(tree, "shape") else tuple(tree)
+        name = path[-1] if path else ""
+        in_moe = any(p in ("moe", "shared") for p in path[:-1])
+        if in_moe and name in _MOE_RULES and path[-2] != "shared":
+            return _resolve(mesh, shape, _MOE_RULES[name], fsdp, tp)
+        rule = _RULES.get(name)
+        if rule is None:
+            return P()                      # norms / scalars: replicate
+        return _resolve(mesh, shape, rule, fsdp, tp)
+
+    return walk(params, ())
+
+
+def batch_specs(batch, mesh, *, dp=("data",)):
+    """tokens (B, S) etc: batch dim over DP if divisible."""
+    def one(x):
+        shape = x.shape if hasattr(x, "shape") else tuple(x)
+        spec = [None] * len(shape)
+        spec[0] = _maybe(mesh, shape[0], dp)
+        return P(*spec)
+    import jax
+    return jax.tree.map(one, batch)
+
+
+def cache_specs(cache, mesh, *, dp=("data",), tp="model", batch_axis=1,
+                seq_axis=2):
+    """KV caches (L, B, S, ...): batch over DP when divisible, otherwise the
+    sequence axis over DP (long-context flash-decoding sharding).  SSM states
+    (no seq axis at decode) replicate when batch is unshardable."""
+    def one(x):
+        shape = x.shape if hasattr(x, "shape") else tuple(x)
+        spec = [None] * len(shape)
+        if len(shape) > batch_axis and _maybe(mesh, shape[batch_axis], dp):
+            spec[batch_axis] = dp
+        elif len(shape) > seq_axis and _maybe(mesh, shape[seq_axis], dp):
+            spec[seq_axis] = dp
+        return P(*spec)
+    import jax
+    return jax.tree.map(one, cache)
+
+
+def named(mesh, specs):
+    import jax
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))

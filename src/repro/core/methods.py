@@ -1,0 +1,422 @@
+"""The 8 DCO methods of the paper, in a unified batched form.
+
+Taxonomy (paper §III):
+  simple scanning      : FDScanning, PDScanning, PDScanning+
+  hypothesis testing   : ADSampling, DADE, DDCres
+  classification based : DDCpca, DDCopq
+
+TPU adaptation (DESIGN.md §3): the per-vector `while d < D: if dis' > τ`
+loop becomes *staged screening over candidate blocks*.  A method exposes a
+``screen(ids, ctx, qi, d, tau_sq) -> keep_mask`` operation per stage plus an
+``exact_sq`` completion in ORIGINAL coordinates, so every method is exact for
+the survivors and differs only in what it prunes.  The numpy backend below is
+the host reference (used by the HNSW index and the CPU benchmarks); the JAX /
+Pallas engines consume the same fitted state.
+
+All arithmetic is in SQUARED Euclidean distance (monotone equivalent).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import transforms as T
+
+# ---------------------------------------------------------------------------
+
+
+class DCOMethod:
+    """Base class.  Subclasses set ``name`` / ``exact`` and implement hooks."""
+
+    name: str = "base"
+    exact: bool = True          # never prunes a true positive
+    needs_training: bool = False
+
+    def __init__(self, **params):
+        self.params = params
+        self.state: dict = {}
+
+    # -- offline ------------------------------------------------------------
+    def fit(self, X: np.ndarray):
+        X = np.asarray(X, np.float32)
+        self.state["X"] = X
+        self.state["N"], self.state["D"] = X.shape
+        self.state["norms"] = (X ** 2).sum(1)
+        self._fit(X)
+        return self
+
+    def _fit(self, X):  # override
+        pass
+
+    def append(self, Xnew: np.ndarray):
+        """Incremental insert support (paper §V-E): extend stored arrays
+        WITHOUT refitting the transforms — the dynamic-data scenario."""
+        Xnew = np.asarray(Xnew, np.float32)
+        self.state["X"] = np.concatenate([self.state["X"], Xnew])
+        self.state["norms"] = np.concatenate([self.state["norms"], (Xnew ** 2).sum(1)])
+        self._append(Xnew)
+        self.state["N"] = self.state["X"].shape[0]
+
+    def _append(self, Xnew):  # override if method keeps derived arrays
+        pass
+
+    # -- online -------------------------------------------------------------
+    def prep_queries(self, Q: np.ndarray) -> dict:
+        """Per-query online pre-processing (the O(D^2) cost the paper flags).
+        Batched: rotations become a single (Q,D)@(D,r) matmul."""
+        Q = np.atleast_2d(np.asarray(Q, np.float32))
+        return self._prep(Q) | {"Q": Q, "qnorms": (Q ** 2).sum(1)}
+
+    def _prep(self, Q) -> dict:
+        return {}
+
+    def stage_dims(self, schedule) -> list:
+        """Screening stages actually used (methods may cap at their rank)."""
+        return [d for d in schedule if d < self.state["D"]]
+
+    def screen(self, ids, ctx, qi, d, tau_sq):
+        """Return (keep_mask, dims_charged). keep=True means 'cannot prune yet'."""
+        raise NotImplementedError
+
+    def exact_sq(self, ids, ctx, qi):
+        X, q = self.state["X"], ctx["Q"][qi]
+        diff = X[ids] - q
+        return np.einsum("nd,nd->n", diff, diff)
+
+
+# ---------------------------------------------------------------------------
+# Simple scanning
+# ---------------------------------------------------------------------------
+
+
+class FDScanning(DCOMethod):
+    """Full-dimension scan: no screening stages at all."""
+
+    name = "FDScanning"
+    exact = True
+
+    def stage_dims(self, schedule):
+        return []
+
+    def screen(self, ids, ctx, qi, d, tau_sq):
+        return np.ones(len(ids), bool), 0
+
+
+class PDScanning(DCOMethod):
+    """Partial-dimension scan on ORIGINAL dims: partial ssd is an exact lower
+    bound, so pruning at ``partial > tau`` is exact."""
+
+    name = "PDScanning"
+    exact = True
+
+    def _partial(self, ids, ctx, qi, d):
+        X, q = self.state["X"], ctx["Q"][qi]
+        diff = X[ids, :d] - q[:d]
+        return np.einsum("nd,nd->n", diff, diff)
+
+    def screen(self, ids, ctx, qi, d, tau_sq):
+        return self._partial(ids, ctx, qi, d) <= tau_sq, d
+
+
+class PDScanningPlus(PDScanning):
+    """PDScanning on PCA-rotated dims (variance-ordered -> earlier exits).
+    Still exact: partial sums over orthonormal directions lower-bound dis^2."""
+
+    name = "PDScanning+"
+    exact = True
+
+    def _fit(self, X):
+        self.state["pca"] = self.params.get("pca") or T.fit_pca(X, seed=self.params.get("seed", 0))
+        self.state["Xrot"] = T.pca_rotate(self.state["pca"], X)
+
+    def _append(self, Xnew):
+        self.state["Xrot"] = np.concatenate(
+            [self.state["Xrot"], T.pca_rotate(self.state["pca"], Xnew)])
+
+    def _prep(self, Q):
+        return {"Qrot": T.pca_rotate(self.state["pca"], Q)}
+
+    def stage_dims(self, schedule):
+        r = self.state["pca"]["rank"]
+        return [d for d in schedule if d < min(r, self.state["D"])]
+
+    def _partial(self, ids, ctx, qi, d):
+        diff = self.state["Xrot"][ids, :d] - ctx["Qrot"][qi, :d]
+        return np.einsum("nd,nd->n", diff, diff)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis testing
+# ---------------------------------------------------------------------------
+
+
+class ADSampling(DCOMethod):
+    """Gao & Long [1]: JL rotation; est = sqrt(D/d) * partial; reject H0 when
+    est > (1 + eps0/sqrt(d)) * tau."""
+
+    name = "ADSampling"
+    exact = False
+
+    def _fit(self, X):
+        rot = T.fit_random_rotation(self.state["D"], seed=self.params.get("seed", 0))
+        self.state["rot"] = rot
+        self.state["Xrot"] = X @ rot["P"]
+
+    def _append(self, Xnew):
+        self.state["Xrot"] = np.concatenate([self.state["Xrot"], Xnew @ self.state["rot"]["P"]])
+
+    def _prep(self, Q):
+        return {"Qrot": Q @ self.state["rot"]["P"]}
+
+    def stage_dims(self, schedule):
+        r = self.state["rot"]["rank"]
+        return [d for d in schedule if d < min(r, self.state["D"])]
+
+    def screen(self, ids, ctx, qi, d, tau_sq):
+        diff = self.state["Xrot"][ids, :d] - ctx["Qrot"][qi, :d]
+        partial = np.einsum("nd,nd->n", diff, diff)
+        eps0 = self.params.get("eps0", 2.1)
+        D = self.state["D"]
+        bound = tau_sq * (1.0 + eps0 / np.sqrt(d)) ** 2
+        return partial * (D / d) <= bound, d
+
+
+class DADE(DCOMethod):
+    """Deng et al. [2]: PCA rotation; eigen-mass-scaled unbiased estimator with
+    a significance-level bound (Eq. 2)."""
+
+    name = "DADE"
+    exact = False
+
+    def _fit(self, X):
+        pca = self.params.get("pca") or T.fit_pca(X, seed=self.params.get("seed", 0))
+        self.state["pca"] = pca
+        self.state["Xrot"] = T.pca_rotate(pca, X)
+        lam = pca["eigvals"].astype(np.float64)
+        total = max(float(pca["total_var"]), float(lam.sum()))
+        cum = np.cumsum(lam)
+        self.state["mass"] = (cum / total).astype(np.float32)       # sum_{<=d} / sum_all
+        # eps_d: relative slack from the residual eigen-mass at significance
+        # alpha (z_alpha * sqrt residual fraction); alpha is empirical (paper).
+        z = self.params.get("z_alpha", 2.0)
+        resid = np.clip(1.0 - cum / total, 0.0, None)
+        self.state["eps_d"] = (z * np.sqrt(resid / np.maximum(cum / total, 1e-9))
+                               ).astype(np.float32)
+
+    def _append(self, Xnew):
+        self.state["Xrot"] = np.concatenate(
+            [self.state["Xrot"], T.pca_rotate(self.state["pca"], Xnew)])
+
+    def _prep(self, Q):
+        return {"Qrot": T.pca_rotate(self.state["pca"], Q)}
+
+    def stage_dims(self, schedule):
+        r = self.state["pca"]["rank"]
+        return [d for d in schedule if d < min(r, self.state["D"])]
+
+    def screen(self, ids, ctx, qi, d, tau_sq):
+        diff = self.state["Xrot"][ids, :d] - ctx["Qrot"][qi, :d]
+        partial = np.einsum("nd,nd->n", diff, diff)
+        mass = max(float(self.state["mass"][d - 1]), 1e-9)
+        est = partial / mass                       # unbiased under eigen-mass scaling
+        eps = float(self.state["eps_d"][d - 1])
+        return est <= tau_sq * (1.0 + eps) ** 2, d
+
+
+class DDCres(DCOMethod):
+    """Yang et al. [3] residual cross-term estimator: norm decomposition +
+    Gaussian bound on the unscanned cross term (Eqs. 4-7), tightened by PCA."""
+
+    name = "DDCres"
+    exact = False
+
+    def _fit(self, X):
+        pca = self.params.get("pca") or T.fit_pca(X, seed=self.params.get("seed", 0))
+        self.state["pca"] = pca
+        Xc = X - pca["mean"]
+        self.state["Xrot"] = Xc @ pca["W"]                  # centered + rotated
+        self.state["cnorms"] = (Xc ** 2).sum(1)             # ||o||^2 centered
+        lam = pca["eigvals"].astype(np.float64)
+        total = max(float(pca["total_var"]), float(lam.sum()))
+        self.state["sigma_sq"] = lam.astype(np.float32)     # per-dim variance
+        # average variance assigned to the un-materialized tail (rank < D)
+        r, D = pca["rank"], self.state["D"]
+        tail = max(total - float(lam.sum()), 0.0)
+        self.state["tail_var"] = np.float32(tail / max(D - r, 1))
+
+    def _append(self, Xnew):
+        pca = self.state["pca"]
+        Xc = Xnew - pca["mean"]
+        self.state["Xrot"] = np.concatenate([self.state["Xrot"], Xc @ pca["W"]])
+        self.state["cnorms"] = np.concatenate([self.state["cnorms"], (Xc ** 2).sum(1)])
+
+    def _prep(self, Q):
+        pca = self.state["pca"]
+        Qc = Q - pca["mean"]
+        Qrot = Qc @ pca["W"]
+        # suffix sums of q_i^2 * sigma_i^2 over rotated dims (Eq. 6)
+        qs = (Qrot ** 2) * self.state["sigma_sq"][None, :]
+        suffix = np.concatenate(
+            [np.cumsum(qs[:, ::-1], axis=1)[:, ::-1], np.zeros((Q.shape[0], 1), np.float32)],
+            axis=1)
+        # tail beyond materialized rank: residual query energy * avg tail var
+        qres = np.clip((Qc ** 2).sum(1) - (Qrot ** 2).sum(1), 0.0, None)
+        tail = qres * self.state["tail_var"]
+        return {"Qrot": Qrot, "qcnorms": (Qc ** 2).sum(1),
+                "var_suffix": suffix + tail[:, None]}
+
+    def stage_dims(self, schedule):
+        r = self.state["pca"]["rank"]
+        return [d for d in schedule if d < min(r, self.state["D"])]
+
+    def screen(self, ids, ctx, qi, d, tau_sq):
+        cross = self.state["Xrot"][ids, :d] @ ctx["Qrot"][qi, :d]
+        dis_p = self.state["cnorms"][ids] + ctx["qcnorms"][qi] - 2.0 * cross
+        m = self.params.get("m", 3.0)
+        var = float(ctx["var_suffix"][qi, d])
+        est = dis_p - 2.0 * m * np.sqrt(max(var, 0.0))      # Eq. 7 lower bound
+        return est <= tau_sq, d
+
+
+# ---------------------------------------------------------------------------
+# Classification based
+# ---------------------------------------------------------------------------
+
+
+class DDCpca(DCOMethod):
+    """Yang et al. [3]: per-(k, d) linear model on (partial, tau).  We use the
+    scale-free form  prune <=> partial_sq > theta_{k,d} * tau_sq, with
+    theta calibrated on index-generated training samples to a target
+    false-prune rate (the 'linear model M_{k,d}' of Alg. 3)."""
+
+    name = "DDCpca"
+    exact = False
+    needs_training = True
+
+    def _fit(self, X):
+        pca = self.params.get("pca") or T.fit_pca(X, seed=self.params.get("seed", 0))
+        self.state["pca"] = pca
+        self.state["Xrot"] = T.pca_rotate(pca, X)
+        self.state["models"] = {}   # (k, d) -> theta
+
+    def _append(self, Xnew):
+        self.state["Xrot"] = np.concatenate(
+            [self.state["Xrot"], T.pca_rotate(self.state["pca"], Xnew)])
+
+    def _prep(self, Q):
+        return {"Qrot": T.pca_rotate(self.state["pca"], Q)}
+
+    def stage_dims(self, schedule):
+        r = self.state["pca"]["rank"]
+        return [d for d in schedule if d < min(r, self.state["D"])]
+
+    def train(self, sample_queries: np.ndarray, k: int, schedule,
+              *, candidates_per_query: int = 2048, fpr: float = 0.002, seed: int = 0):
+        """Offline phase of Alg. 3: sampled queries + a fixed candidate
+        generator produce (partial, tau, label) samples per stage d."""
+        rng = np.random.default_rng(seed)
+        ctx = self.prep_queries(sample_queries)
+        N = self.state["N"]
+        ratios = {d: [] for d in self.stage_dims(schedule)}
+        for qi in range(sample_queries.shape[0]):
+            ids = rng.choice(N, size=min(candidates_per_query, N), replace=False)
+            full = self.exact_sq(ids, ctx, qi)
+            tau_sq = np.partition(full, k - 1)[k - 1]
+            pos = full <= tau_sq                      # true "dis <= tau" rows
+            if not pos.any():
+                continue
+            for d in ratios:
+                diff = self.state["Xrot"][ids, :d] - ctx["Qrot"][qi, :d]
+                partial = np.einsum("nd,nd->n", diff, diff)
+                ratios[d].append(partial[pos] / max(float(tau_sq), 1e-12))
+        for d, r in ratios.items():
+            allr = np.concatenate(r) if r else np.array([1.0])
+            # keep everything below the (1-fpr) quantile of positives' ratio
+            self.state["models"][(k, d)] = float(np.quantile(allr, 1.0 - fpr))
+        self.state["trained_k"] = k
+        return self
+
+    def screen(self, ids, ctx, qi, d, tau_sq):
+        k = self.state.get("trained_k")
+        theta = self.state["models"].get((k, d))
+        if theta is None:                      # untrained stage: keep all
+            return np.ones(len(ids), bool), 0
+        diff = self.state["Xrot"][ids, :d] - ctx["Qrot"][qi, :d]
+        partial = np.einsum("nd,nd->n", diff, diff)
+        return partial <= theta * tau_sq, d
+
+
+class DDCopq(DCOMethod):
+    """Yang et al. [3]: single per-k linear model on the PQ approximate
+    distance; negatives verified by a full scan (Alg. 3 variant)."""
+
+    name = "DDCopq"
+    exact = False
+    needs_training = True
+
+    def _fit(self, X):
+        self.state["pq"] = T.fit_pq(
+            X, n_sub=self.params.get("n_sub", 16),
+            n_codes=self.params.get("n_codes", 256),
+            seed=self.params.get("seed", 0))
+        self.state["models"] = {}
+
+    def _append(self, Xnew):
+        pq = self.state["pq"]
+        pq["codes"] = np.concatenate([pq["codes"], T.pq_encode(pq, Xnew)])
+
+    def _prep(self, Q):
+        luts = np.stack([T.pq_query_lut(self.state["pq"], q) for q in Q])
+        return {"luts": luts}
+
+    def stage_dims(self, schedule):
+        return [0]     # a single PQ screening stage; dim arg unused
+
+    def train(self, sample_queries: np.ndarray, k: int, schedule=None,
+              *, candidates_per_query: int = 2048, fpr: float = 0.002, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        ctx = self.prep_queries(sample_queries)
+        N = self.state["N"]
+        ratios = []
+        for qi in range(sample_queries.shape[0]):
+            ids = rng.choice(N, size=min(candidates_per_query, N), replace=False)
+            full = self.exact_sq(ids, ctx, qi)
+            tau_sq = np.partition(full, k - 1)[k - 1]
+            pos = full <= tau_sq
+            if not pos.any():
+                continue
+            adist = T.pq_adist(self.state["pq"], ctx["luts"][qi], self.state["pq"]["codes"][ids])
+            ratios.append(adist[pos] / max(float(tau_sq), 1e-12))
+        allr = np.concatenate(ratios) if ratios else np.array([1.0])
+        self.state["models"][k] = float(np.quantile(allr, 1.0 - fpr))
+        self.state["trained_k"] = k
+        return self
+
+    def screen(self, ids, ctx, qi, d, tau_sq):
+        k = self.state.get("trained_k")
+        theta = self.state["models"].get(k)
+        if theta is None:
+            return np.ones(len(ids), bool), 0
+        adist = T.pq_adist(self.state["pq"], ctx["luts"][qi], self.state["pq"]["codes"][ids])
+        n_sub = self.state["pq"]["books"].shape[0]
+        return adist <= theta * tau_sq, n_sub   # charge n_sub 'dims' for the LUT pass
+
+
+# ---------------------------------------------------------------------------
+
+ALL_METHODS = {
+    "FDScanning": FDScanning,
+    "PDScanning": PDScanning,
+    "PDScanning+": PDScanningPlus,
+    "ADSampling": ADSampling,
+    "DADE": DADE,
+    "DDCres": DDCres,
+    "DDCpca": DDCpca,
+    "DDCopq": DDCopq,
+}
+
+BASELINES = ("FDScanning", "PDScanning", "PDScanning+")
+SOTA = ("ADSampling", "DADE", "DDCres", "DDCpca", "DDCopq")
+
+
+def make_method(name: str, **params) -> DCOMethod:
+    return ALL_METHODS[name](**params)

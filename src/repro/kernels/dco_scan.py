@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: staged DCO scan (stage-1 partial distances + screening).
+
+TPU-native form of the paper's incremental dimension scanning (DESIGN.md §3):
+the grid walks (query block, candidate block, dim block) with the dim axis
+innermost; the ``partial`` output block — resident in VMEM across the whole
+dim loop — carries the running partial distance, and after each dim block the
+scaled-estimate-vs-tau test freezes pruned (row, query) pairs.  When an
+entire (candidate x query) tile is dead, the next dim-block's matmul is
+skipped via ``pl.when`` — the block-level early exit that replaces the
+paper's per-vector ``break`` (compute is saved; the HBM->VMEM stream for the
+skipped tile is the price of keeping the pipeline static, which is the right
+trade on TPU where stage-1 is MXU-bound for d1 >= 128).
+
+Tile sizes: x tile (BN, BD), q tile (BQ, BD), accumulator (BN, BQ) — all
+MXU-aligned multiples of (8, 128) for f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(scales_ref, x_ref, q_ref, tau_ref, out_ref, keep_ref,
+            *, nd_blocks: int):
+    di = pl.program_id(2)
+
+    @pl.when(di == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    tau = tau_ref[...][None, :]                            # (1, BQ)
+    prev_scale = scales_ref[jnp.maximum(di - 1, 0)]
+    alive = out_ref[...] * prev_scale <= tau               # frozen rows stay dead
+
+    @pl.when(jnp.any(alive))
+    def _compute():
+        xb = x_ref[...]                                    # (BN, BD)
+        qb = q_ref[...]                                    # (BQ, BD)
+        contrib = ((xb * xb).sum(1, keepdims=True)
+                   - 2.0 * jax.lax.dot_general(
+                       xb, qb, (((1,), (1,)), ((), ())),
+                       preferred_element_type=jnp.float32)
+                   + (qb * qb).sum(1, keepdims=True).T)
+        out_ref[...] = jnp.where(alive, out_ref[...] + jnp.maximum(contrib, 0.0),
+                                 out_ref[...])
+
+    @pl.when(di == nd_blocks - 1)
+    def _finish():
+        est = out_ref[...] * scales_ref[di]
+        keep_ref[...] = (alive & (est <= tau)).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_q", "block_d",
+                                             "interpret"))
+def dco_scan(x, q, tau, scales, *, block_n: int = 256, block_q: int = 128,
+             block_d: int = 128, interpret: bool = False):
+    """x (N, d1) rotated leading dims; q (Q, d1) rotated queries;
+    tau (Q,) squared thresholds; scales (n_dblocks,) estimate multipliers.
+    Returns (partial (N, Q) f32, keep (N, Q) int8).  N, Q, d1 must be tile
+    multiples — ``kernels.ops.dco_scan_op`` pads arbitrary shapes."""
+    n, d1 = x.shape
+    nq = q.shape[0]
+    nd = pl.cdiv(d1, block_d)
+    grid = (pl.cdiv(nq, block_q), pl.cdiv(n, block_n), nd)
+    kernel = functools.partial(_kernel, nd_blocks=nd)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((scales.shape[0],), lambda qi, ni, di: (0,)),
+            pl.BlockSpec((block_n, block_d), lambda qi, ni, di: (ni, di)),
+            pl.BlockSpec((block_q, block_d), lambda qi, ni, di: (qi, di)),
+            pl.BlockSpec((block_q,), lambda qi, ni, di: (qi,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, block_q), lambda qi, ni, di: (ni, qi)),
+            pl.BlockSpec((block_n, block_q), lambda qi, ni, di: (ni, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, nq), jnp.float32),
+            jax.ShapeDtypeStruct((n, nq), jnp.int8),
+        ],
+        interpret=interpret,
+    )(scales, x, q, tau)

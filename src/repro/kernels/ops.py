@@ -1,0 +1,66 @@
+"""jit'd public wrappers for the Pallas kernels: shape padding + fallbacks.
+
+``interpret`` defaults to True when no TPU is present so the same call sites
+work in this CPU container and on real hardware.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.dco_scan import dco_scan
+from repro.kernels.pq_lookup import pq_lookup
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:
+        return False
+
+
+def _pad_to(a, axis, mult, value=0.0):
+    size = a.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_q", "block_d",
+                                             "interpret"))
+def dco_scan_op(x, q, tau, scales, *, block_n=256, block_q=128, block_d=128,
+                interpret=None):
+    """Padded staged-scan: arbitrary (N, Q, d1); returns (partial, keep)
+    trimmed back to the logical shape.  Pad rows get partial=large, keep=0."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    n, d1 = x.shape
+    nq = q.shape[0]
+    xp = _pad_to(_pad_to(x, 0, block_n), 1, block_d)
+    qp = _pad_to(_pad_to(q, 0, block_q), 1, block_d)
+    taup = _pad_to(tau, 0, block_q, value=-1.0)     # pad queries prune all
+    nd = xp.shape[1] // block_d
+    sc = scales
+    if sc.shape[0] < nd:                            # extend schedule for padding
+        sc = jnp.concatenate([sc, jnp.repeat(sc[-1:], nd - sc.shape[0])])
+    partial, keep = dco_scan(xp, qp, taup, sc[:nd], block_n=block_n,
+                             block_q=block_q, block_d=block_d,
+                             interpret=interpret)
+    return partial[:n, :nq], keep[:n, :nq]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_q", "interpret"))
+def pq_lookup_op(codes, lut, *, block_n=128, block_q=8, interpret=None):
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    n = codes.shape[0]
+    nq = lut.shape[0]
+    cp = _pad_to(codes.astype(jnp.int32), 0, block_n, value=0)
+    lp = _pad_to(lut, 0, block_q)
+    out = pq_lookup(cp, lp, block_n=block_n, block_q=block_q,
+                    interpret=interpret)
+    return out[:n, :nq]

@@ -1,0 +1,53 @@
+"""Pallas TPU kernel: PQ asymmetric-distance scan (DDCopq's screening pass).
+
+On CPU-SIMD / GPU this is a per-lane LUT gather (`lut[m, codes[n, m]]`) — a
+shuffle-heavy pattern with no TPU analogue.  The TPU-native rewrite
+(DESIGN.md §3): expand the uint8/uint16 codes of a candidate tile into a
+one-hot tensor and contract it with the query LUT on the MXU:
+
+    adist[n, q] = onehot(codes)[n, m, k] * lut[q, m, k]   (sum over m, k)
+
+i.e. one (BN, M*K) @ (M*K, BQ) matmul per tile — gathers become matmuls,
+which is exactly how embedding lookups are lowered on TPUs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(codes_ref, lut_ref, out_ref):
+    codes = codes_ref[...]                                  # (BN, M) int32
+    lut = lut_ref[...]                                      # (BQ, M, K) f32
+    bn, m = codes.shape
+    bq, _, k = lut.shape
+    onehot = (codes[:, :, None]
+              == jax.lax.broadcasted_iota(jnp.int32, (1, 1, k), 2)
+              ).astype(jnp.float32)                         # (BN, M, K)
+    out_ref[...] = jax.lax.dot_general(
+        onehot.reshape(bn, m * k), lut.reshape(bq, m * k),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_q", "interpret"))
+def pq_lookup(codes, lut, *, block_n: int = 128, block_q: int = 8,
+              interpret: bool = False):
+    """codes (N, M) int32; lut (Q, M, K) f32 -> adist (N, Q) f32.
+    N, Q must be tile multiples (see kernels.ops.pq_lookup_op for padding)."""
+    n, m = codes.shape
+    nq, _, k = lut.shape
+    grid = (pl.cdiv(nq, block_q), pl.cdiv(n, block_n))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, m), lambda qi, ni: (ni, 0)),
+            pl.BlockSpec((block_q, m, k), lambda qi, ni: (qi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_q), lambda qi, ni: (ni, qi)),
+        out_shape=jax.ShapeDtypeStruct((n, nq), jnp.float32),
+        interpret=interpret,
+    )(codes, lut)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def dco_scan_ref(x, q, tau, scales, block_d: int):
+    """Incremental staged DCO scan, reference semantics.
+
+    x (N, d1), q (Q, d1); scales (n_dblocks,) per-stage estimate multipliers
+    (1.0 for lower-bound methods, D/d or eigen-mass factors for estimators).
+    A (row, query) pair 'freezes' at the first dim-block where its scaled
+    partial exceeds tau[query]; its partial output keeps the frozen value and
+    keep=0.  Survivors end with the full d1-dim partial and keep=1.
+
+    Returns (partial (N, Q) f32, keep (N, Q) int8).
+    """
+    n, d1 = x.shape
+    nq = q.shape[0]
+    nblk = (d1 + block_d - 1) // block_d
+    acc = jnp.zeros((n, nq), jnp.float32)
+    alive = jnp.ones((n, nq), bool)
+    for b in range(nblk):
+        lo, hi = b * block_d, min((b + 1) * block_d, d1)
+        xb, qb = x[:, lo:hi], q[:, lo:hi]
+        contrib = ((xb ** 2).sum(1)[:, None] - 2.0 * xb @ qb.T
+                   + (qb ** 2).sum(1)[None, :])
+        acc = jnp.where(alive, acc + jnp.maximum(contrib, 0.0), acc)
+        est = acc * scales[b]
+        alive = alive & (est <= tau[None, :])
+    return acc, alive.astype(jnp.int8)
+
+
+def pq_lookup_ref(codes, lut):
+    """codes (N, M) int32, lut (Q, M, K) f32 -> adist (N, Q) f32."""
+    # gather formulation: adist[n, q] = sum_m lut[q, m, codes[n, m]]
+    n, m = codes.shape
+    g = lut[:, jnp.arange(m)[None, :], codes]       # (Q, N, M)
+    return jnp.moveaxis(g.sum(-1), 0, 1)            # (N, Q)
+
+
+def make_dco_scales(kind: str, d1: int, block_d: int, D: int, *,
+                    eps0: float = 2.1, mass=None, eps_d=None, theta: float = 1.0):
+    """Per-dim-block estimate multipliers matching core.methods decisions."""
+    nblk = (d1 + block_d - 1) // block_d
+    ds = np.minimum((np.arange(1, nblk + 1)) * block_d, d1).astype(np.float64)
+    if kind in ("lb", "fdscan"):
+        s = np.ones(nblk)
+    elif kind == "adsampling":
+        s = (D / ds) / (1.0 + eps0 / np.sqrt(ds)) ** 2
+    elif kind == "dade":
+        m = np.asarray(mass, np.float64)[np.minimum(ds.astype(int) - 1, len(mass) - 1)]
+        e = np.asarray(eps_d, np.float64)[np.minimum(ds.astype(int) - 1, len(eps_d) - 1)]
+        s = 1.0 / (np.maximum(m, 1e-9) * (1.0 + e) ** 2)
+    elif kind == "ratio":
+        s = np.full(nblk, 1.0 / max(theta, 1e-9))
+    else:
+        raise ValueError(kind)
+    return jnp.asarray(s, jnp.float32)

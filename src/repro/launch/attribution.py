@@ -1,0 +1,102 @@
+"""Per-source-line attribution of HLO flops / bytes (the dry-run 'profiler').
+
+With no real TPU, ``lowered.as_text()`` + the trip-count-weighted cost model
+IS the profile (brief §Pallas hints).  This module joins each op's
+``stack_frame_id`` with the FileNames/FunctionNames/FileLocations/StackFrames
+tables that XLA emits at the top of the HLO dump, yielding
+"file:function:line -> flops/bytes" — what a profiler's source view gives.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+from repro.launch.hlo_cost import (HloCost, _first_dims, _shape_bytes,
+                                   _shape_elems)
+
+_ZERO = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+         "while", "iota"}
+
+
+def parse_stack_tables(text: str) -> dict:
+    """stack_frame_id -> 'file:function:line' (innermost frame)."""
+    def table(name):
+        m = re.search(rf"^{name}$", text, re.M)
+        if not m:
+            return {}
+        out = {}
+        for line in text[m.end():].splitlines()[1:]:
+            mm = re.match(r"^(\d+) (.*)$", line)
+            if not mm:
+                break
+            out[mm.group(1)] = mm.group(2)
+        return out
+
+    files = {k: v.strip('"').split("/")[-1] for k, v in table("FileNames").items()}
+    funcs = {k: v.strip('"') for k, v in table("FunctionNames").items()}
+    locs = {}
+    for k, v in table("FileLocations").items():
+        mm = re.search(r"file_name_id=(\d+) function_name_id=(\d+) line=(\d+)", v)
+        if mm:
+            locs[k] = (f"{files.get(mm.group(1), '?')}:"
+                       f"{funcs.get(mm.group(2), '?')}:{mm.group(3)}")
+    frames = {}
+    for k, v in table("StackFrames").items():
+        mm = re.search(r"file_location_id=(\d+)", v)
+        if mm:
+            frames[k] = locs.get(mm.group(1), "?")
+    return frames
+
+
+def attribute(hlo_text: str, top: int = 20) -> dict:
+    """Returns {'flops': [(src, v), ...], 'bytes': [...]} trip-weighted."""
+    frames = parse_stack_tables(hlo_text)
+    hc = HloCost(hlo_text)
+    mult = defaultdict(float)
+
+    def visit(comp, m):
+        mult[comp] += m
+        for op in hc.comps.get(comp, []):
+            if op["opcode"] == "while":
+                for sub in (op.get("body"), op.get("cond")):
+                    if sub:
+                        visit(sub, m * op["trip"])
+            elif op["opcode"] in ("fusion", "call") and op.get("calls"):
+                visit(op["calls"], m)
+
+    visit(hc.entry, 1.0)
+    flops_by = defaultdict(float)
+    bytes_by = defaultdict(float)
+    for comp, ops in hc.comps.items():
+        m = mult.get(comp, 0.0)
+        if m == 0:
+            continue
+        shapes = {o["name"]: o["shape"] for o in ops}
+        for op in ops:
+            mm = re.search(r"stack_frame_id=(\d+)", op.get("rest", ""))
+            src = frames.get(mm.group(1), "untagged") if mm else "untagged"
+            if op["opcode"] == "dot":
+                res = _shape_elems(op["shape"])
+                k = 1
+                dims = _first_dims(shapes.get(op.get("operands", [None])[0], ""))
+                for ci in op.get("lhs_cdims", []):
+                    if ci < len(dims):
+                        k *= dims[ci]
+                flops_by[src] += m * 2.0 * res * k
+            if op["opcode"] in _ZERO:
+                continue
+            b = _shape_bytes(op["shape"]) + sum(
+                _shape_bytes(shapes.get(o, "")) for o in op.get("operands", []))
+            bytes_by[src] += m * b
+    rank = lambda d: sorted(d.items(), key=lambda kv: -kv[1])[:top]
+    return {"flops": rank(flops_by), "bytes": rank(bytes_by)}
+
+
+def print_report(hlo_text: str, top: int = 20):
+    rep = attribute(hlo_text, top)
+    print("== dot flops by source ==")
+    for s, v in rep["flops"]:
+        print(f"  {s:56s} {v:.3e}")
+    print("== bytes by source ==")
+    for s, v in rep["bytes"]:
+        print(f"  {s:56s} {v:.3e}")

@@ -1,0 +1,252 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this script builds abstract inputs (ShapeDtypeStruct — no
+allocation), attaches the production shardings, lowers the step function
+against the production mesh, compiles it, and records
+``memory_analysis()`` / ``cost_analysis()`` / parsed collective bytes into a
+JSON artifact consumed by EXPERIMENTS.md §Dry-run/§Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all --mesh both --out artifacts/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, SHAPES, applicable_shapes, get_arch
+from repro.configs import sharding as SH
+from repro.launch import roofline as RL
+from repro.launch.mesh import dp_axes as mesh_dp_axes, make_production_mesh
+from repro.models import build_model
+from repro.train.train_step import init_state, make_train_step
+
+
+def _sds(shape, dtype, mesh=None, spec=None):
+    sh = NamedSharding(mesh, spec) if mesh is not None and spec is not None else None
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+
+def _attach(tree_sds, mesh, specs):
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        tree_sds, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def _batch_sds(cfg, shape, mesh, dp):
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["src_embeds"] = jax.ShapeDtypeStruct((B, min(S, 1024), cfg.d_model),
+                                                   jnp.float32)
+    if cfg.family == "vlm" and cfg.prefix_len:
+        batch["patches"] = jax.ShapeDtypeStruct((B, cfg.prefix_len, cfg.d_model),
+                                                jnp.float32)
+    return _attach(batch, mesh, SH.batch_specs(batch, mesh, dp=dp))
+
+
+def _bf16(tree_sds):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype),
+        tree_sds, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, fsdp=None,
+               moment_dtype=jnp.float32, remat="block", pad_heads=False,
+               attn_blocks=None, retrieval_overrides=None):
+    """Returns (lowered, chips, model_flops)."""
+    dp = mesh_dp_axes(mesh)
+    fsdp = fsdp if fsdp is not None else dp
+    chips = int(np.prod(list(mesh.shape.values())))
+
+    if arch == "dco-retrieval":
+        return _lower_retrieval(shape_name, mesh, chips,
+                                overrides=retrieval_overrides)
+
+    cfg = get_arch(arch)
+    if attn_blocks:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, attn_block_q=attn_blocks[0],
+                          attn_block_kv=attn_blocks[1])
+    if pad_heads and cfg.n_heads:
+        # Megatron-style: pad query heads to a TP-divisible count so GSPMD
+        # never contraction-shards attention (EXPERIMENTS.md §Perf cell B).
+        import dataclasses as _dc
+        tp = mesh.shape["model"]
+        if cfg.n_heads % tp:
+            cfg = _dc.replace(cfg, n_heads=((cfg.n_heads + tp - 1) // tp) * tp)
+    shape = SHAPES[shape_name]
+    api = build_model(cfg, mesh=mesh, dp_axes=dp, remat=remat)
+    mf = RL.model_flops_estimate(cfg, shape)
+
+    if shape.kind == "train":
+        state_sds = jax.eval_shape(
+            lambda: init_state(api, jax.random.PRNGKey(0),
+                               moment_dtype=moment_dtype))
+        pspecs = SH.param_specs(state_sds.params, mesh, fsdp=fsdp)
+        state_sds = jax.tree_util.tree_map(
+            lambda s, sp: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+            (state_sds.params, state_sds.opt["m"], state_sds.opt["v"]),
+            (pspecs, pspecs, pspecs),
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        from repro.train.train_step import TrainState
+        st = TrainState(state_sds[0],
+                        {"m": state_sds[1], "v": state_sds[2],
+                         "step": _sds((), jnp.int32, mesh, P())},
+                        _sds((), jnp.int32, mesh, P()))
+        batch = _batch_sds(cfg, shape, mesh, dp)
+        step = make_train_step(api)
+        return jax.jit(step).lower(st, batch), chips, mf
+
+    params_sds = _bf16(jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0))))
+    params_sds = _attach(params_sds, mesh,
+                         SH.param_specs(params_sds, mesh, fsdp=fsdp))
+    if shape.kind == "prefill":
+        batch = _batch_sds(cfg, shape, mesh, dp)
+        return jax.jit(api.prefill).lower(params_sds, batch), chips, mf
+
+    # decode
+    B, S = shape.global_batch, shape.seq_len
+    cache_sds = jax.eval_shape(lambda: api.init_cache(B, S))
+    cache_sds = _attach(cache_sds, mesh, SH.cache_specs(cache_sds, mesh, dp=dp))
+    token = _sds((B,), jnp.int32, mesh, P(SH._maybe(mesh, B, dp)))
+    cur_len = _sds((B,), jnp.int32, mesh, P(SH._maybe(mesh, B, dp)))
+    return jax.jit(api.decode_step).lower(params_sds, cache_sds, token,
+                                          cur_len), chips, mf
+
+
+def _lower_retrieval(shape_name, mesh, chips, overrides=None):
+    from repro.configs.dco_bench import CONFIG as rc
+    from repro.core.jax_engine import DcoEngineConfig, make_distributed_topk
+    ov = overrides or {}
+    axes = tuple(mesh.axis_names)
+    n_per = (rc.n_total + chips - 1) // chips
+    n = n_per * chips
+    cfg = DcoEngineConfig(kind=rc.kind, d1=ov.get("d1", rc.d1), k=rc.k,
+                          capacity=ov.get("capacity", rc.capacity),
+                          query_chunk=ov.get("query_chunk", 8))
+    fn = make_distributed_topk(mesh, cfg, shard_axes=axes)
+    spec = P(axes)
+    sdt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[
+        ov.get("stage1_dtype", "float32")]
+    tdt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[
+        ov.get("tail_dtype", "float32")]
+    args = (
+        _sds((n, cfg.d1), sdt, mesh, spec),
+        _sds((n, rc.dim - cfg.d1), tdt, mesh, spec),
+        _sds((n,), jnp.float32, mesh, spec),
+        _sds((n,), jnp.float32, mesh, spec),
+        _sds((rc.query_batch, cfg.d1), sdt, mesh, P()),
+        _sds((rc.query_batch, rc.dim - cfg.d1), tdt, mesh, P()),
+    )
+    # model "flops": stage-1 exact cost (the useful work of the scan)
+    mf = 2.0 * rc.query_batch * rc.n_total * rc.d1
+    return jax.jit(fn).lower(*args), chips, mf
+
+
+def run_cell(arch, shape_name, mesh_kind, out_dir, tag="", **kw):
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "mesh_shape": dict(mesh.shape), "tag": tag, "options": str(kw)}
+    sfx = f"__{tag}" if tag else ""
+    try:
+        lowered, chips, mf = lower_cell(arch, shape_name, mesh, **kw)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        rec.update(RL.analyze(compiled, chips=chips, model_flops=mf))
+        rec.update({"lower_s": t1 - t0, "compile_s": t2 - t1, "ok": True})
+        try:                                  # save HLO for offline re-analysis
+            import zstandard
+            os.makedirs(os.path.join(out_dir, "hlo"), exist_ok=True)
+            hp = os.path.join(out_dir, "hlo",
+                              f"{mesh_kind}__{arch}__{shape_name}{sfx}.hlo.zst")
+            with open(hp, "wb") as f:
+                f.write(zstandard.ZstdCompressor(level=6).compress(
+                    compiled.as_text().encode()))
+        except Exception:
+            pass
+    except Exception as e:
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:]})
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{mesh_kind}__{arch}__{shape_name}{sfx}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    status = "OK" if rec.get("ok") else "FAIL"
+    dom = rec.get("dominant", "-")
+    print(f"[{status}] {mesh_kind:8s} {arch:22s} {shape_name:12s} "
+          f"dominant={dom} t={time.time()-t0:.1f}s", flush=True)
+    return rec
+
+
+def all_cells():
+    cells = []
+    for arch in ARCH_NAMES:
+        cfg = get_arch(arch)
+        for s in applicable_shapes(cfg):
+            cells.append((arch, s))
+    cells.append(("dco-retrieval", "serve"))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--pad-heads", action="store_true")
+    ap.add_argument("--fsdp-data-only", action="store_true",
+                    help="multipod: FSDP within pod only (pod axis pure DP)")
+    ap.add_argument("--moment-bf16", action="store_true")
+    ap.add_argument("--attn-blocks", default="",
+                    help="block_q,block_kv override for blockwise attention")
+    ap.add_argument("--retr", default="",
+                    help="retrieval overrides k=v,... (stage1_dtype, tail_dtype, d1, capacity)")
+    ap.add_argument("--tag", default="", help="suffix for artifact filenames")
+    args = ap.parse_args()
+    if args.list:
+        for a, s in all_cells():
+            print(a, s)
+        return
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    cells = all_cells() if args.all else [(args.arch, args.shape)]
+    kw = {}
+    if args.pad_heads:
+        kw["pad_heads"] = True
+    if args.fsdp_data_only:
+        kw["fsdp"] = ("data",)
+    if args.moment_bf16:
+        kw["moment_dtype"] = jnp.bfloat16
+    if args.attn_blocks:
+        kw["attn_blocks"] = tuple(int(x) for x in args.attn_blocks.split(","))
+    if args.retr:
+        ov = {}
+        for kv2 in args.retr.split(","):
+            k2, v2 = kv2.split("=")
+            ov[k2] = int(v2) if v2.isdigit() else v2
+        kw["retrieval_overrides"] = ov
+    for mk in meshes:
+        for arch, shape in cells:
+            run_cell(arch, shape, mk, args.out, tag=args.tag, **kw)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,284 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop body ONCE, which
+under-reports scanned-layer models by ~n_layers x.  This module parses the
+post-SPMD HLO text, builds the computation call graph, and accumulates
+
+    flops  — dot ops: 2 * |result| * K  (+1 flop/elem for top-level arith)
+    bytes  — per top-level op: |result| + sum |operands|   (fusion-aware:
+             fused subcomputations are invisible, the fusion op's operands /
+             result ARE the HBM traffic — XLA's own accounting model)
+    collective bytes — result sizes of all-reduce / all-gather /
+             reduce-scatter / all-to-all / collective-permute
+
+weighted by ``known_trip_count`` of every enclosing while loop.  All numbers
+are PER DEVICE (the module is already SPMD-partitioned).
+
+Byte model (the "fused"/primary estimate): a TPU pipeline keeps loop-body
+intermediates in VMEM, so an op is charged HBM traffic only for
+  * operands produced by parameter / get-tuple-element (weights, loop
+    carries, entry args) — these stream from HBM each iteration,
+  * operands or results larger than VMEM_CAP (64 MB) — too big to stay
+    resident (e.g. the (T, d_ff) MLP intermediate),
+while small in-body intermediates (e.g. a 33 MB flash-attention score tile)
+are free.  ``bytes_upper`` keeps the charge-everything bound for reference.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+VMEM_CAP = 64 * 2**20
+
+_DT_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(
+    r"(pred|bf16|f16|f32|f64|s4|u4|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128|token)"
+    r"\[([0-9,]*)\]")
+
+_OPLINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"([\w\-]+)\((.*)$")
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops whose top-level appearance implies real HBM traffic
+_ZERO_BYTE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                  "bitcast", "while", "iota", "after-all", "partition-id",
+                  "replica-id", "custom-call", "conditional", "call",
+                  "rng-bit-generator"}
+
+_ARITH_FLOP_OPS = {"add", "subtract", "multiply", "divide", "negate", "select",
+                   "maximum", "minimum", "compare", "exponential", "log",
+                   "rsqrt", "sqrt", "tanh", "clamp", "power", "and", "or",
+                   "convert", "reduce", "reduce-window"}
+
+# ops a TPU compile would fuse into neighbours (CPU leaves them top-level):
+# charged 0 bytes in the "fused" estimate, full bytes in the "upper" bound.
+_FUSABLE = {"add", "subtract", "multiply", "divide", "negate", "select",
+            "maximum", "minimum", "compare", "exponential", "exponential-minus-one",
+            "log", "log-plus-one", "rsqrt", "sqrt", "cbrt", "tanh", "logistic",
+            "clamp", "power", "and", "or", "not", "xor", "abs", "sign",
+            "floor", "ceil", "round-nearest-afz", "round-nearest-even",
+            "convert", "broadcast", "transpose", "reshape", "slice", "pad",
+            "reverse", "concatenate", "is-finite", "shift-left",
+            "shift-right-logical", "shift-right-arithmetic", "rem", "atan2",
+            "expm1", "log1p", "cosine", "sine", "real", "imag"}
+
+
+def _nelems(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _shape_bytes(text: str) -> int:
+    return sum(_nelems(d) * _DT_BYTES[t] for t, d in _SHAPE_RE.findall(text))
+
+
+def _shape_elems(text: str) -> int:
+    return sum(_nelems(d) for d, in [(d,) for _, d in _SHAPE_RE.findall(text)])
+
+
+def _first_dims(text: str):
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return []
+    return [int(x) for x in m.group(2).split(",")] if m.group(2) else []
+
+
+class HloCost:
+    def __init__(self, hlo_text: str):
+        self.comps = {}                  # name -> list of parsed op dicts
+        self.entry = None
+        self._parse(hlo_text)
+        self._memo = {}
+
+    # ------------------------------------------------------------------
+    def _parse(self, text):
+        cur = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                continue
+            if not line.startswith(" ") and line.endswith("{") and \
+                    (line.startswith("%") or line.startswith("ENTRY")):
+                head = line.split()[1] if line.startswith("ENTRY") else line.split()[0]
+                cur = head.lstrip("%").split("(")[0].strip()
+                self.comps[cur] = []
+                if line.startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            if cur is None or "=" not in line:
+                continue
+            m = _OPLINE.match(line)
+            if not m:
+                continue
+            name, shape_s, opcode, rest = m.groups()
+            op = {"name": name, "shape": shape_s.strip(), "opcode": opcode,
+                  "rest": rest}
+            if opcode == "dot":
+                mm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rest)
+                op["lhs_cdims"] = [int(x) for x in mm.group(1).split(",")] if mm and mm.group(1) else []
+                op["operands"] = re.findall(r"%([\w.\-]+)", rest.split(")")[0])
+            elif opcode == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", rest)
+                mc = re.search(r"condition=%?([\w.\-]+)", rest)
+                mt = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', rest)
+                op["body"] = mb.group(1) if mb else None
+                op["cond"] = mc.group(1) if mc else None
+                op["trip"] = int(mt.group(1)) if mt else 1
+                op["trip_known"] = bool(mt)
+            elif opcode in ("fusion", "call", "reduce", "reduce-window", "sort",
+                            "map", "scatter", "select-and-scatter"):
+                mm = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", rest)
+                op["calls"] = mm.group(1) if mm else None
+                op["operands"] = re.findall(r"%([\w.\-]+)", rest.split("),")[0])
+            else:
+                op["operands"] = re.findall(r"%([\w.\-]+)", rest.split("),")[0])
+            self.comps[cur].append(op)
+
+    # ------------------------------------------------------------------
+    def _comp_cost(self, comp_name):
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        flops = bytes_ = bytes_fused = 0.0
+        coll = defaultdict(float)
+        unknown_trips = 0
+        shapes = {}
+        producer = {}
+        ops = self.comps.get(comp_name, [])
+        for op in ops:
+            shapes[op["name"]] = op["shape"]
+            producer[op["name"]] = op["opcode"]
+
+        _HBM_SRC = {"parameter", "get-tuple-element", "constant"}
+
+        def _charge(op):
+            """HBM bytes for this op under the VMEM-residency model."""
+            oc = op["opcode"]
+            rb = _shape_bytes(op["shape"])
+            # slicing reads only the window — and only when the SOURCE is in
+            # HBM (big, or a loop carry/parameter); slicing a VMEM-resident
+            # tensor is free
+            def _src_in_hbm():
+                return any(
+                    _shape_bytes(shapes.get(o, "")) > VMEM_CAP
+                    or (producer.get(o, "parameter") in _HBM_SRC
+                        and _shape_bytes(shapes.get(o, "")) > VMEM_CAP)
+                    for o in op.get("operands", []))
+            if oc in ("dynamic-slice", "slice", "gather"):
+                return rb if _src_in_hbm() else 0
+            if oc in ("dynamic-update-slice", "scatter"):
+                upd = op.get("operands", [None, None])[1:2]
+                ub = _shape_bytes(shapes.get(upd[0], "")) if upd else rb
+                return (2 * min(ub, rb)) if (rb > VMEM_CAP) else 0
+            total = 0
+            for o in op.get("operands", []):
+                b = _shape_bytes(shapes.get(o, ""))
+                if producer.get(o, "parameter") in _HBM_SRC or b > VMEM_CAP:
+                    total += b
+            if rb > VMEM_CAP:
+                total += rb
+            return total
+
+        for op in ops:
+            oc = op["opcode"]
+            if oc == "while":
+                sub_f = [0.0, 0.0, 0.0]
+                sub_c, sub_u = defaultdict(float), 0
+                for sub in (op["body"], op["cond"]):
+                    if sub and sub in self.comps:
+                        f, b, bf, c, u = self._comp_cost(sub)
+                        sub_f[0] += f
+                        sub_f[1] += b
+                        sub_f[2] += bf
+                        for k, v in c.items():
+                            sub_c[k] += v
+                        sub_u += u
+                t = op["trip"]
+                flops += t * sub_f[0]
+                bytes_ += t * sub_f[1]
+                bytes_fused += t * sub_f[2]
+                for k, v in sub_c.items():
+                    coll[k] += t * v
+                unknown_trips += sub_u + (0 if op["trip_known"] else 1)
+                continue
+            if oc == "dot":
+                res = _shape_elems(op["shape"])
+                k = 1
+                lhs = op.get("operands", [None])[0]
+                lhs_shape = shapes.get(lhs, "")
+                dims = _first_dims(lhs_shape)
+                for ci in op.get("lhs_cdims", []):
+                    if ci < len(dims):
+                        k *= dims[ci]
+                flops += 2.0 * res * k
+                bytes_ += _shape_bytes(op["shape"]) + sum(
+                    _shape_bytes(shapes.get(o, "")) for o in op.get("operands", []))
+                bytes_fused += _charge(op)
+                continue
+            if oc in ("fusion", "call"):
+                sub = op.get("calls")
+                sub_ops = self.comps.get(sub, []) if sub else []
+                if sub and sub in self.comps:
+                    f, _b, _bf, c, u = self._comp_cost(sub)  # flops only:
+                    flops += f                               # traffic is the
+                    unknown_trips += u                       # fusion op's
+                    for k, v in c.items():
+                        coll[k] += v
+                bytes_ += _shape_bytes(op["shape"]) + sum(
+                    _shape_bytes(shapes.get(o, "")) for o in op.get("operands", []))
+                kinds = {o2["opcode"] for o2 in sub_ops}
+                rb = _shape_bytes(op["shape"])
+                op_bytes = [_shape_bytes(shapes.get(o, ""))
+                            for o in op.get("operands", [])]
+                has_big_src = any(b > VMEM_CAP for b in op_bytes)
+                if kinds & {"dynamic-update-slice", "scatter"} and rb > VMEM_CAP:
+                    # window write into an HBM buffer: 2x the (small) update
+                    # operands; the big buffer passes through untouched
+                    bytes_fused += 2 * sum(b for b in op_bytes if b <= VMEM_CAP)
+                elif kinds & {"dynamic-slice", "slice", "gather"} and has_big_src:
+                    # window read out of an HBM buffer: result + small operands
+                    bytes_fused += rb + sum(
+                        b for b in op_bytes if b <= min(VMEM_CAP, 4 * max(rb, 1)))
+                else:
+                    bytes_fused += _charge(op)
+                continue
+            for kind in _COLL_KINDS:
+                if oc == kind or oc == kind + "-start":
+                    b = _shape_bytes(op["shape"])
+                    coll[kind] += b
+                    bytes_ += b
+                    bytes_fused += b
+                    break
+            else:
+                if oc in _ZERO_BYTE_OPS or oc.endswith("-done"):
+                    continue
+                if oc in _ARITH_FLOP_OPS:
+                    flops += _shape_elems(op["shape"])
+                bytes_ += _shape_bytes(op["shape"]) + sum(
+                    _shape_bytes(shapes.get(o, "")) for o in op.get("operands", []))
+                bytes_fused += _charge(op)
+        out = (flops, bytes_, bytes_fused, coll, unknown_trips)
+        self._memo[comp_name] = out
+        return out
+
+    def totals(self):
+        f, b, bf, c, u = self._comp_cost(self.entry)
+        return {"flops": f, "bytes": bf, "bytes_upper": b,
+                "collectives": dict(c),
+                "collective_bytes": float(sum(c.values())),
+                "unknown_trip_whiles": u}
+
+
+def analyze_hlo(hlo_text: str) -> dict:
+    return HloCost(hlo_text).totals()

@@ -1,0 +1,49 @@
+"""Re-run the roofline analysis over saved HLO artifacts (no recompiling)."""
+import glob
+import json
+import os
+import sys
+
+import zstandard
+
+from repro.launch import roofline as RL
+from repro.launch.hlo_cost import analyze_hlo
+
+
+def main(out_dir="artifacts/dryrun"):
+    for jpath in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        rec = json.load(open(jpath))
+        if not rec.get("ok"):
+            continue
+        tag = rec.get("tag", "")
+        sfx = f"__{tag}" if tag else ""
+        hpath = os.path.join(out_dir, "hlo",
+                             f"{rec['mesh']}__{rec['arch']}__{rec['shape']}{sfx}.hlo.zst")
+        if not os.path.exists(hpath):
+            continue
+        hlo = zstandard.ZstdDecompressor().decompress(
+            open(hpath, "rb").read(), max_output_size=2 ** 31).decode()
+        tot = analyze_hlo(hlo)
+        chips = rec["chips"]
+        terms = {
+            "compute_s": tot["flops"] / RL.PEAK_FLOPS,
+            "memory_s": tot["bytes"] / RL.HBM_BW,
+            "collective_s": tot["collective_bytes"] / RL.ICI_BW,
+        }
+        rec.update({
+            "hlo_flops_per_device": tot["flops"],
+            "hlo_bytes_per_device": tot["bytes"],
+            "hlo_bytes_upper_per_device": tot["bytes_upper"],
+            "collective_bytes_per_device": tot["collective_bytes"],
+            "collectives": tot["collectives"],
+            "terms_s": terms,
+            "dominant": max(terms, key=terms.get),
+        })
+        if rec.get("model_flops"):
+            rec["useful_ratio"] = rec["model_flops"] / (tot["flops"] * chips)
+        json.dump(rec, open(jpath, "w"), indent=1, default=str)
+        print(f"reanalyzed {os.path.basename(jpath)}: dominant={rec['dominant']}")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

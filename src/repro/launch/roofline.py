@@ -1,0 +1,189 @@
+"""Roofline-term extraction from compiled XLA artifacts (brief §Roofline).
+
+    compute    = HLO_FLOPs       / (chips * 197e12 FLOP/s)   (bf16 v5e)
+    memory     = HLO_bytes       / (chips * 819e9  B/s)      (HBM)
+    collective = collective_bytes/ (chips * 50e9   B/s)      (ICI per link)
+
+cost_analysis() reports per-DEVICE flops/bytes for SPMD-partitioned
+executables; collective bytes are NOT in cost_analysis, so we parse the
+post-partitioning HLO and sum result-shape bytes of every all-reduce /
+all-gather / reduce-scatter / all-to-all / collective-permute op (weighted
+by how many times its enclosing while-loop body runs, inferred from scan
+trip counts).
+"""
+from __future__ import annotations
+
+import json
+import re
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLL = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+         "collective-permute")
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64)"
+                       r"\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes per collective kind.  Ops inside while-loop
+    bodies (lax.scan over layers) are multiplied by the loop trip count when
+    it is statically known from the ``trip_count=N`` backend annotation or
+    the standard counter pattern."""
+    out = {k: 0 for k in _COLL}
+    # split into computations; track which are while bodies with trip counts
+    trip = _trip_counts(hlo_text)
+    cur_comp, cur_mult = None, 1
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*(%?[\w.\-]+)\s*(?:\([^)]*\))?\s*->.*{\s*$", line)
+        if line.startswith(("ENTRY", "%")) and "{" in line and "=" not in line.split("{")[0]:
+            name = line.split()[0].lstrip("%").split("(")[0].rstrip()
+            cur_comp = name
+            cur_mult = trip.get(name, 1)
+        for kind in _COLL:
+            if re.search(rf"=\s*[^=]*\b{kind}(?:-start|-done)?\(", line) or \
+               re.search(rf"\b{kind}(?:-start)?\(", line) and "=" in line:
+                lhs = line.split("=")[0] + "=" + line.split("=")[1].split("(")[0]
+                out[kind] += _shape_bytes(lhs) * cur_mult
+                break
+    return out
+
+
+def _trip_counts(hlo_text: str) -> dict:
+    """Map computation name -> trip count for counted while loops.
+    XLA annotates known trip counts in backend_config or we infer from the
+    constant compare in the condition; fall back to 1."""
+    trips = {}
+    # pattern: while(...), condition=%cond_N, body=%body_N ... trip_count
+    for m in re.finditer(r'body=%?([\w.\-]+)[^\n]*?'
+                         r'backend_config=.*?"known_trip_count":\{"n":"(\d+)"\}',
+                         hlo_text):
+        trips[m.group(1)] = int(m.group(2))
+    return trips
+
+
+def analyze(compiled, *, chips: int, model_flops: float | None = None) -> dict:
+    from repro.launch.hlo_cost import analyze_hlo
+    hlo = compiled.as_text()
+    tot = analyze_hlo(hlo)          # trip-count-weighted, per device
+    flops = float(tot["flops"])
+    bytes_acc = float(tot["bytes"])
+    coll = tot["collectives"]
+    coll_total = float(tot["collective_bytes"])
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_acc / HBM_BW,
+        "collective_s": coll_total / ICI_BW,
+    }
+    # NOTE: cost_analysis on a partitioned executable is already per-device.
+    dominant = max(terms, key=terms.get)
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(ma, "peak_memory_in_bytes", None),
+        }
+    except Exception as e:                               # pragma: no cover
+        mem = {"error": str(e)}
+    result = {
+        "chips": chips,
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_acc,
+        "collective_bytes_per_device": coll_total,
+        "collectives": coll,
+        "terms_s": terms,
+        "dominant": dominant,
+        "memory": mem,
+    }
+    if model_flops is not None:
+        result["model_flops"] = model_flops
+        dev_total = flops * chips
+        result["useful_ratio"] = model_flops / dev_total if dev_total else 0.0
+    return result
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """6*N*D for dense, 6*N_active*D for MoE (training); forward-only /3 for
+    serving steps; decode counts a single new token per sequence."""
+    n_active = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence (attention over the cache adds the
+    # S-dependent term: 2 * layers * cache_dim work — folded into n_active
+    # approximation; see EXPERIMENTS.md notes)
+    return 2.0 * n_active * shape.global_batch
+
+
+def active_params(cfg) -> float:
+    """Parameter count active per token (MoE counts top_k+shared experts)."""
+    d, L, V = cfg.d_model, cfg.n_layers, cfg.vocab_padded
+    emb = V * d * (1 if cfg.tie_embeddings else 2)
+    if cfg.family == "ssm":
+        sc = cfg.ssm
+        di = sc.expand * d
+        H = di // sc.head_dim
+        per = d * (2 * di + 2 * sc.d_state + H) + di * d
+        return emb + L * per
+    # attention per layer
+    if cfg.mla is not None:
+        m = cfg.mla
+        attn = (d * m.q_lora + m.q_lora * cfg.n_heads * (m.nope_dim + m.rope_dim)
+                + d * (m.kv_lora + m.rope_dim)
+                + m.kv_lora * cfg.n_heads * (m.nope_dim + m.v_dim)
+                + cfg.n_heads * m.v_dim * d)
+    elif cfg.n_heads:
+        attn = d * cfg.n_heads * cfg.hd + 2 * d * cfg.n_kv_heads * cfg.hd \
+            + cfg.n_heads * cfg.hd * d
+    else:
+        attn = 0
+    glu = 3 if cfg.act in ("swiglu", "geglu") else 2
+    dense_ffn = glu * d * cfg.d_ff
+    if cfg.family == "moe":
+        mc = cfg.moe
+        moe_ffn = glu * d * mc.d_expert * (mc.top_k + mc.n_shared) + d * mc.n_experts
+        total = emb + mc.first_dense * (attn + dense_ffn) \
+            + (L - mc.first_dense) * (attn + moe_ffn)
+        return total
+    if cfg.family == "hybrid":
+        sc = cfg.ssm
+        di = sc.expand * d
+        H = di // sc.head_dim
+        mamba = d * (2 * di + 2 * sc.d_state + H) + di * d
+        n_attn = L // cfg.attn_every
+        n_mamba = L - n_attn
+        mc = cfg.moe
+        n_moe = L // 2 if mc.every_other else L
+        n_mlp = L - n_moe
+        moe_ffn = glu * d * mc.d_expert * mc.top_k + d * mc.n_experts
+        return emb + n_attn * attn + n_mamba * mamba \
+            + n_moe * moe_ffn + n_mlp * dense_ffn
+    if cfg.family == "encdec":
+        enc = cfg.enc_layers * (attn + dense_ffn)
+        dec = L * (2 * attn + dense_ffn)
+        return emb + enc + dec
+    return emb + L * (attn + dense_ffn)

@@ -1,0 +1,75 @@
+"""Training launcher: end-to-end driver (example-scale on CPU, production
+shardings on a real mesh).
+
+  PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --steps 50 \
+      --smoke --ckpt-dir /tmp/ckpt
+
+``--smoke`` swaps in the reduced config + tiny batch so the driver runs on
+one CPU device; without it the full config is instantiated (requires the
+production mesh / real accelerators).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, get_arch, smoke_config
+from repro.configs.base import RunShape
+from repro.data import TokenPipeline, make_batch_fn
+from repro.launch.mesh import dp_axes as mesh_dp_axes, make_host_mesh
+from repro.models import build_model
+from repro.train.fault import StepMonitor, run_resumable
+from repro.train.train_step import init_state, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a crash at this step (fault-tolerance demo)")
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(args.arch) if args.smoke else get_arch(args.arch)
+    shape = RunShape("cli", args.seq, args.batch, "train")
+    api = build_model(cfg, remat="block")
+    step_fn = jax.jit(make_train_step(api, microbatches=args.microbatches))
+    state = init_state(api, jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(state.params))
+    print(f"arch={cfg.name} params={n_params/1e6:.2f}M steps={args.steps}")
+
+    batch_fn_raw = make_batch_fn(cfg, shape)
+    batch_fn = lambda s: {k: jnp.asarray(v) for k, v in batch_fn_raw(s).items()}
+
+    if args.ckpt_dir:
+        mon = StepMonitor()
+        state, last = run_resumable(step_fn, state, batch_fn,
+                                    steps=args.steps, ckpt_dir=args.ckpt_dir,
+                                    ckpt_every=args.ckpt_every,
+                                    monitor=mon, fail_at=args.fail_at)
+        print(f"finished at step {last}; stragglers={len(mon.stragglers)}")
+        return state
+
+    pipe = TokenPipeline(batch_fn)
+    t0 = time.perf_counter()
+    for step, batch in pipe.iter(0, args.steps):
+        state, metrics = step_fn(state, batch)
+        if step % 5 == 0 or step == args.steps - 1:
+            loss = float(metrics["loss"])
+            print(f"step {step:4d} loss {loss:.4f} "
+                  f"({time.perf_counter()-t0:.1f}s)")
+    return state
+
+
+if __name__ == "__main__":
+    main()

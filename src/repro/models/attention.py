@@ -1,0 +1,100 @@
+"""GQA/MQA attention module (projections + RoPE + qk_norm + cache)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (CDTYPE, apply_rope, blockwise_attention,
+                                 decode_attention, dense_init, rms_norm)
+
+
+def init_attention(key, cfg, *, cross: bool = False):
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], d, H * hd),
+        "wk": dense_init(ks[1], d, Hkv * hd),
+        "wv": dense_init(ks[2], d, Hkv * hd),
+        "wo": dense_init(ks[3], H * hd, d),
+    }
+    if cfg.qk_norm:
+        p["q_gamma"] = jnp.ones((hd,), jnp.float32)
+        p["k_gamma"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _qkv(params, cfg, xq, xkv, q_positions, *, rope: bool):
+    B, Sq, _ = xq.shape
+    Skv = xkv.shape[1]
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    xq_c, xkv_c = xq.astype(CDTYPE), xkv.astype(CDTYPE)
+    q = (xq_c @ params["wq"].astype(CDTYPE)).reshape(B, Sq, H, hd)
+    k = (xkv_c @ params["wk"].astype(CDTYPE)).reshape(B, Skv, Hkv, hd)
+    v = (xkv_c @ params["wv"].astype(CDTYPE)).reshape(B, Skv, Hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_gamma"])
+        k = rms_norm(k, params["k_gamma"])
+    if rope:
+        kv_positions = jnp.arange(Skv)[None, :] if Sq != Skv else q_positions
+        q = apply_rope(q, q_positions, cfg.rope_theta)
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_forward(params, cfg, x, *, kind="causal", prefix_len=0,
+                      memory=None, return_kv=False):
+    """Training / prefill path.  ``memory`` (B, Sm, D) switches to
+    cross-attention (no RoPE, full mask)."""
+    B, S, _ = x.shape
+    pos = jnp.arange(S)[None, :]
+    if memory is None:
+        q, k, v = _qkv(params, cfg, x, x, pos, rope=True)
+    else:
+        q, k, v = _qkv(params, cfg, x, memory, pos, rope=False)
+        kind = "full"
+    out = blockwise_attention(q, k, v, kind=kind, prefix_len=prefix_len,
+                              block_q=cfg.attn_block_q,
+                              block_kv=cfg.attn_block_kv)
+    out = (out.reshape(B, S, -1).astype(CDTYPE) @ params["wo"].astype(CDTYPE)
+           ).astype(x.dtype)
+    return (out, (k, v)) if return_kv else out
+
+
+def attention_decode(params, cfg, x, cache, cur_len, *, cross=False):
+    """One-token decode.  ``cache`` = {'k','v'} (B, Smax, Hkv, hd) for self-
+    attention (updated at cur_len-1) or static cross K/V (read-only)."""
+    B = x.shape[0]
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    xc = x.astype(CDTYPE)
+    q = (xc @ params["wq"].astype(CDTYPE)).reshape(B, 1, H, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_gamma"])
+    if cross:
+        k_cache, v_cache = cache["k"], cache["v"]
+        if not cfg.qk_norm:
+            pass
+        out = decode_attention(q, k_cache, v_cache, k_cache.shape[1])
+        new_cache = cache
+    else:
+        pos = jnp.broadcast_to(jnp.asarray(cur_len - 1), (B,))[:, None]
+        k = (xc @ params["wk"].astype(CDTYPE)).reshape(B, 1, Hkv, hd)
+        v = (xc @ params["wv"].astype(CDTYPE)).reshape(B, 1, Hkv, hd)
+        if cfg.qk_norm:
+            k = rms_norm(k, params["k_gamma"])
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        # scatter at per-batch positions (cur_len may be scalar or (B,))
+        idx = jnp.broadcast_to(jnp.asarray(cur_len), (B,)) - 1
+        rows = jnp.arange(B)
+        k_cache = cache["k"].at[rows, idx].set(k[:, 0].astype(cache["k"].dtype))
+        v_cache = cache["v"].at[rows, idx].set(v[:, 0].astype(cache["v"].dtype))
+        out = decode_attention(q, k_cache, v_cache, cur_len)
+        new_cache = {"k": k_cache, "v": v_cache}
+    out = (out.reshape(B, 1, -1).astype(CDTYPE) @ params["wo"].astype(CDTYPE)
+           ).astype(x.dtype)
+    return out, new_cache
+
+
+def init_kv_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

@@ -1,0 +1,187 @@
+"""Shared model layers: norms, RoPE, blockwise attention, MLPs.
+
+Conventions:
+  * params are plain nested dicts of jnp arrays (no flax in this container);
+  * compute dtype bf16, accumulation/softmax f32;
+  * attention is blockwise (online softmax over KV chunks) so 32k-prefill
+    activations never materialize an (S x S) score matrix;
+  * every init function takes an explicit PRNG key.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CDTYPE = jnp.bfloat16    # compute dtype
+
+
+def dense_init(key, d_in, d_out, scale=None):
+    s = (1.0 / np.sqrt(d_in)) if scale is None else scale
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * s)
+
+
+def rms_norm(x, gamma=None, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt((x32 * x32).mean(-1, keepdims=True) + eps)
+    if gamma is not None:
+        y = y * gamma.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def nonparam_layer_norm(x, eps=1e-6):
+    """OLMo-style non-parametric LayerNorm (no gain/bias)."""
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def make_norm(cfg):
+    if cfg.nonparam_ln:
+        return (lambda key, d: None), (lambda p, x: nonparam_layer_norm(x))
+    return (lambda key, d: jnp.ones((d,), jnp.float32)), (lambda p, x: rms_norm(x, p))
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta):
+    """x (..., S, H, hd); positions (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs[None, :]  # (...,S,hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]   # (...,S,1,hd/2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _mask(q_pos, kv_pos, kind, prefix_len):
+    if kind == "full":
+        return jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    m = q_pos[:, None] >= kv_pos[None, :]
+    if kind == "prefix":   # bidirectional over the leading prefix tokens
+        m = m | (kv_pos[None, :] < prefix_len)
+    return m
+
+
+def blockwise_attention(q, k, v, *, kind="causal", prefix_len=0, q_offset=0,
+                        block_q=512, block_kv=1024, scale=None):
+    """q (B, Sq, H, hd); k/v (B, Skv, Hkv, hd).  Online-softmax over KV
+    chunks; memory is O(block_q * block_kv) per (batch, head)."""
+    B, Sq, H, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+
+    def _pick(S, target):
+        """largest divisor of S that is <= target (static shapes)."""
+        for b in range(min(target, S), 0, -1):
+            if S % b == 0:
+                return b
+        return S
+
+    block_q = _pick(Sq, block_q)
+    block_kv = _pick(Skv, block_kv)
+    nq, nk = Sq // block_q, Skv // block_kv
+
+    qg = q.reshape(B, nq, block_q, Hkv, G, hd)
+    kg = k.reshape(B, nk, block_kv, Hkv, hd)
+    vg = v.reshape(B, nk, block_kv, Hkv, hd)
+
+    def q_chunk(iq):
+        qc = qg[:, iq]                                   # (B, bq, Hkv, G, hd)
+        q_pos = q_offset + iq * block_q + jnp.arange(block_q)
+
+        def kv_step(carry, ik):
+            m_run, l_run, acc = carry
+            kc, vc = kg[:, ik], vg[:, ik]                # (B, bk, Hkv, hd)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            kv_pos = ik * block_kv + jnp.arange(block_kv)
+            msk = _mask(q_pos, kv_pos, kind, prefix_len)
+            s = jnp.where(msk[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m_run, s.max(-1))
+            # guard fully-masked rows (m_new = -inf)
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(msk[None, None, None], p, 0.0)
+            corr = jnp.where(jnp.isfinite(m_run), jnp.exp(m_run - m_safe), 0.0)
+            l_new = l_run * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((B, Hkv, G, block_q), -jnp.inf, jnp.float32),
+                jnp.zeros((B, Hkv, G, block_q), jnp.float32),
+                jnp.zeros((B, Hkv, G, block_q, hd), jnp.float32))
+        # checkpoint the kv step as well: its backward residuals become the
+        # small (m, l, acc) carries instead of stacked (bq x bk) score tiles
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step, prevent_cse=False), init, jnp.arange(nk))
+        out = acc / jnp.maximum(l_f[..., None], 1e-20)
+        return out                                        # (B, Hkv, G, bq, hd)
+
+    # checkpoint each q-chunk: the backward recomputes its KV scan instead of
+    # stacking (S x S) attention probabilities as residuals (flash-attention
+    # backward semantics; verified against the dry-run HLO residual shapes)
+    outs = jax.lax.map(jax.checkpoint(q_chunk, prevent_cse=False),
+                       jnp.arange(nq))                    # (nq, B, Hkv, G, bq, hd)
+    out = jnp.moveaxis(outs, 0, 3)                        # (B, Hkv, G, nq, bq, hd)
+    return out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cur_len, *, scale=None):
+    """Single-step decode: q (B, 1, H, hd); caches (B, Smax, Hkv, hd);
+    cur_len (B,) or scalar valid lengths (the new token is at cur_len-1)."""
+    B, _, H, hd = q.shape
+    Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(Smax)
+    valid = pos[None, :] < jnp.broadcast_to(jnp.asarray(cur_len), (B,))[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act in ("swiglu", "geglu"):
+        return {"wg": dense_init(ks[0], d, f), "wu": dense_init(ks[1], d, f),
+                "wd": dense_init(ks[2], f, d)}
+    return {"w1": dense_init(ks[0], d, f), "w2": dense_init(ks[1], f, d)}
+
+
+def mlp(params, cfg, x):
+    xc = x.astype(CDTYPE)
+    if cfg.act in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu
+        h = act(xc @ params["wg"].astype(CDTYPE)) * (xc @ params["wu"].astype(CDTYPE))
+        return (h @ params["wd"].astype(CDTYPE)).astype(x.dtype)
+    h = jax.nn.gelu(xc @ params["w1"].astype(CDTYPE))
+    return (h @ params["w2"].astype(CDTYPE)).astype(x.dtype)

@@ -1,0 +1,765 @@
+"""Model assembly: every assigned architecture family behind one ModelApi.
+
+Families:
+  dense  — qwen3-32b/4b, olmo-1b, starcoder2-7b
+  moe    — deepseek-v2/v3 (MLA attention + shared/routed experts + MTP)
+  ssm    — mamba2-130m
+  hybrid — jamba (1 attn : 7 mamba interleave, MoE every other layer)
+  encdec — seamless-m4t (stubbed audio-frame encoder input)
+  vlm    — paligemma (stubbed patch-embedding prefix, prefix-LM mask)
+
+Layers are stacked and scanned (jax.lax.scan) to bound HLO size when
+lowering 61-layer models against 512 devices.  The LM-head cross entropy is
+computed in sequence chunks so (B, S, V) logits never materialize.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models.layers import CDTYPE
+
+
+@dataclass
+class ModelApi:
+    cfg: ArchConfig
+    init: Callable                    # (key) -> params
+    loss: Callable                    # (params, batch) -> (loss, metrics)
+    prefill: Callable                 # (params, batch) -> (logits, cache)
+    decode_step: Callable             # (params, cache, token, cur_len) -> (logits, cache)
+    init_cache: Callable              # (batch, max_len) -> cache
+
+
+def make_constrainer(mesh, dp_axes):
+    """Activation sharding constraint: batch rows over the DP axes.
+
+    GSPMD drops the batch sharding at the embedding gather + scan boundary
+    (verified in the dry-run HLO: global-batch `pred` masks inside the layer
+    loop), so every block body re-pins its input — the standard MaxText-style
+    activation constraint.  No-op when the dim doesn't divide or mesh is None.
+    """
+    if mesh is None:
+        return lambda x: x
+    from jax.sharding import NamedSharding
+    import numpy as np
+    dp_size = int(np.prod([mesh.shape[a] for a in dp_axes]))
+
+    def constrain(x):
+        if x.ndim == 0 or x.shape[0] % dp_size != 0:
+            return x
+        spec = P(dp_axes, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+
+def _embed_init(key, cfg):
+    return jax.random.normal(key, (cfg.vocab_padded, cfg.d_model),
+                             jnp.float32) * 0.02
+
+
+def _head(params, cfg, h):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (h.astype(CDTYPE) @ w.astype(CDTYPE)).astype(jnp.float32)
+
+
+def chunked_ce(params, cfg, h, targets, mask, *, chunk=512, extra_h=None):
+    """Cross entropy over padded vocab without materializing full logits.
+    h (B, S, D) f; targets (B, S) int32; mask (B, S) f32."""
+    B, S, D = h.shape
+    chunk = min(chunk, S)
+    nc = S // chunk
+    hc = h.reshape(B, nc, chunk, D)
+    tc = targets.reshape(B, nc, chunk)
+    mc = mask.reshape(B, nc, chunk)
+
+    def body(carry, ins):
+        hs, ts, ms = ins                                   # (B,c,D),(B,c),(B,c)
+        logits = _head(params, cfg, hs)                    # (B,c,Vp) f32
+        logits = jnp.where(jnp.arange(cfg.vocab_padded)[None, None, :] < cfg.vocab,
+                           logits, -1e30)
+        lse = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, ts[..., None], -1)[..., 0]
+        return carry + ((lse - gold) * ms).sum(), None
+
+    tot, _ = jax.lax.scan(
+        body, jnp.zeros((), jnp.float32),
+        (jnp.moveaxis(hc, 1, 0), jnp.moveaxis(tc, 1, 0), jnp.moveaxis(mc, 1, 0)))
+    return tot / jnp.maximum(mask.sum(), 1.0)
+
+
+def _norm_fns(cfg):
+    init_n, apply_n = L.make_norm(cfg)
+    return init_n, apply_n
+
+
+# ---------------------------------------------------------------------------
+# block definitions (one per family flavour)
+# ---------------------------------------------------------------------------
+
+
+def _init_dense_block(key, cfg):
+    init_n, _ = _norm_fns(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {"attn": A.init_attention(k1, cfg), "mlp": L.init_mlp(k2, cfg),
+            "n1": init_n(k3, cfg.d_model), "n2": init_n(k4, cfg.d_model)}
+
+
+def _dense_block(p, cfg, h, *, kind="causal", prefix_len=0):
+    _, apply_n = _norm_fns(cfg)
+    h = h + A.attention_forward(p["attn"], cfg, apply_n(p["n1"], h),
+                                kind=kind, prefix_len=prefix_len)
+    h = h + L.mlp(p["mlp"], cfg, apply_n(p["n2"], h))
+    return h
+
+
+def _dense_block_decode(p, cfg, h, cache, cur_len):
+    _, apply_n = _norm_fns(cfg)
+    a, cache = A.attention_decode(p["attn"], cfg, apply_n(p["n1"], h),
+                                  cache, cur_len)
+    h = h + a
+    h = h + L.mlp(p["mlp"], cfg, apply_n(p["n2"], h))
+    return h, cache
+
+
+def _init_mla_block(key, cfg, *, use_moe):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"attn": MLA.init_mla(k1, cfg),
+         "n1": jnp.ones((cfg.d_model,), jnp.float32),
+         "n2": jnp.ones((cfg.d_model,), jnp.float32)}
+    if use_moe:
+        p["moe"] = MOE.init_moe(k2, cfg)
+    else:
+        p["mlp"] = L.init_mlp(k2, cfg)
+    return p
+
+
+def _mla_block(p, cfg, h, *, mesh, dp_axes):
+    a, kv = MLA.mla_forward(p["attn"], cfg, L.rms_norm(h, p["n1"]))
+    h = h + a
+    if "moe" in p:
+        f, aux = MOE.moe_forward(p["moe"], cfg, L.rms_norm(h, p["n2"]),
+                                 mesh=mesh, dp_axes=dp_axes)
+    else:
+        f, aux = L.mlp(p["mlp"], cfg, L.rms_norm(h, p["n2"])), 0.0
+    return h + f, aux, kv
+
+
+def _mla_block_decode(p, cfg, h, cache, cur_len, *, mesh, dp_axes):
+    a, cache = MLA.mla_decode(p["attn"], cfg, L.rms_norm(h, p["n1"]), cache,
+                              cur_len)
+    h = h + a
+    if "moe" in p:
+        f, _ = MOE.moe_forward(p["moe"], cfg, L.rms_norm(h, p["n2"]),
+                               mesh=mesh, dp_axes=dp_axes)
+    else:
+        f = L.mlp(p["mlp"], cfg, L.rms_norm(h, p["n2"]))
+    return h + f, cache
+
+
+def _init_mamba_block(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"mixer": M.init_mamba(k1, cfg),
+            "n1": jnp.ones((cfg.d_model,), jnp.float32)}
+
+
+def _mamba_block(p, cfg, h, *, state=None, return_state=False):
+    if return_state:
+        y, st = M.mamba_forward(p["mixer"], cfg, L.rms_norm(h, p["n1"]),
+                                init_state=None, return_state=True)
+        return h + y, st
+    return h + M.mamba_forward(p["mixer"], cfg, L.rms_norm(h, p["n1"]))
+
+
+def _mamba_block_decode(p, cfg, h, state):
+    y, st = M.mamba_decode(p["mixer"], cfg, L.rms_norm(h, p["n1"]), state)
+    return h + y, st
+
+
+# ---------------------------------------------------------------------------
+# family: dense decoder (also vlm via prefix mask)
+# ---------------------------------------------------------------------------
+
+
+def build_dense(cfg: ArchConfig, mesh=None, dp_axes=("data",),
+                remat: str = "block") -> ModelApi:
+    prefix = cfg.prefix_len
+    _c = make_constrainer(mesh, dp_axes)
+
+    def init(key):
+        ks = jax.random.split(key, cfg.n_layers + 3)
+        layers = jax.vmap(lambda k: _init_dense_block(k, cfg))(
+            jnp.stack(ks[: cfg.n_layers]))
+        p = {"embed": _embed_init(ks[-1], cfg), "layers": layers,
+             "final_norm": jnp.ones((cfg.d_model,), jnp.float32)}
+        if not cfg.tie_embeddings:
+            p["lm_head"] = L.dense_init(ks[-2], cfg.d_model, cfg.vocab_padded)
+        return p
+
+    def backbone(params, h, *, kind="causal"):
+        body = (lambda hh, lp: (_c(_dense_block(lp, cfg, hh, kind=kind,
+                                                prefix_len=prefix)), None))
+        if remat != "none":
+            body = jax.checkpoint(body, prevent_cse=False)
+        h, _ = jax.lax.scan(body, h, params["layers"])
+        return L.rms_norm(h, params["final_norm"]) if not cfg.nonparam_ln \
+            else L.nonparam_layer_norm(h)
+
+    def _inputs_to_h(params, batch):
+        tok = batch["tokens"]
+        h = params["embed"][tok].astype(jnp.bfloat16)
+        if prefix and "patches" in batch:
+            h = jnp.concatenate([batch["patches"].astype(h.dtype), h], 1)
+        return _c(h)
+
+    def loss(params, batch):
+        h = _inputs_to_h(params, batch)
+        kind = "prefix" if prefix else "causal"
+        h = backbone(params, h, kind=kind)
+        tok = batch["tokens"]
+        tgt = jnp.pad(tok[:, 1:], ((0, 0), (0, 1)))
+        mask = jnp.pad(jnp.ones_like(tok[:, 1:], jnp.float32), ((0, 0), (0, 1)))
+        if prefix and "patches" in batch:
+            h = h[:, prefix:]
+        ce = chunked_ce(params, cfg, h, tgt, mask)
+        return ce, {"ce": ce}
+
+    def prefill(params, batch):
+        h = _inputs_to_h(params, batch)
+        kind = "prefix" if prefix else "causal"
+        S = h.shape[1]
+        caches = []
+
+        def body(hh, lp):
+            a, kv = A.attention_forward(
+                lp["attn"], cfg,
+                (L.nonparam_layer_norm(hh) if cfg.nonparam_ln
+                 else L.rms_norm(hh, lp["n1"])),
+                kind=kind, prefix_len=prefix, return_kv=True)
+            hh = hh + a
+            hh = hh + L.mlp(lp["mlp"], cfg,
+                            (L.nonparam_layer_norm(hh) if cfg.nonparam_ln
+                             else L.rms_norm(hh, lp["n2"])))
+            return _c(hh), kv
+
+        h, kvs = jax.lax.scan(body, h, params["layers"])
+        h = (L.rms_norm(h, params["final_norm"]) if not cfg.nonparam_ln
+             else L.nonparam_layer_norm(h))
+        logits = _head(params, cfg, h[:, -1:])[:, 0]
+        cache = {"k": jnp.moveaxis(kvs[0], 0, 0), "v": kvs[1]}  # (L,B,S,Hkv,hd)
+        return logits, {"k": kvs[0], "v": kvs[1], "len": S}
+
+    def init_cache(batch, max_len):
+        return {"k": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads,
+                                cfg.hd), jnp.bfloat16),
+                "v": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads,
+                                cfg.hd), jnp.bfloat16)}
+
+    def decode_step(params, cache, token, cur_len):
+        h = params["embed"][token][:, None, :].astype(jnp.bfloat16)
+
+        def body(hh, ins):
+            lp, kc, vc = ins
+            hh, nc = _dense_block_decode(lp, cfg, hh, {"k": kc, "v": vc},
+                                         cur_len)
+            return _c(hh), (nc["k"], nc["v"])
+
+        h, (nk, nv) = jax.lax.scan(body, h, (params["layers"], cache["k"],
+                                             cache["v"]))
+        h = (L.rms_norm(h, params["final_norm"]) if not cfg.nonparam_ln
+             else L.nonparam_layer_norm(h))
+        logits = _head(params, cfg, h)[:, 0]
+        return logits, {"k": nk, "v": nv}
+
+    return ModelApi(cfg, init, loss, prefill, decode_step, init_cache)
+
+
+# ---------------------------------------------------------------------------
+# family: deepseek MoE (MLA + experts + optional MTP)
+# ---------------------------------------------------------------------------
+
+
+def build_moe(cfg: ArchConfig, mesh=None, dp_axes=("data",),
+              remat: str = "block") -> ModelApi:
+    nd = cfg.moe.first_dense
+    nm = cfg.n_layers - nd
+    _c = make_constrainer(mesh, dp_axes)
+
+    def init(key):
+        ks = jax.random.split(key, 6)
+        dense_layers = jax.vmap(
+            lambda k: _init_mla_block(k, cfg, use_moe=False))(
+            jax.random.split(ks[0], nd))
+        moe_layers = jax.vmap(
+            lambda k: _init_mla_block(k, cfg, use_moe=True))(
+            jax.random.split(ks[1], nm))
+        p = {"embed": _embed_init(ks[2], cfg),
+             "dense_layers": dense_layers, "moe_layers": moe_layers,
+             "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+             "lm_head": L.dense_init(ks[3], cfg.d_model, cfg.vocab_padded)}
+        if cfg.mtp:
+            k1, k2 = jax.random.split(ks[4])
+            p["mtp"] = {"proj": L.dense_init(k1, 2 * cfg.d_model, cfg.d_model),
+                        "block": _init_mla_block(k2, cfg, use_moe=False),
+                        "norm": jnp.ones((cfg.d_model,), jnp.float32)}
+        return p
+
+    def backbone(params, h, collect_kv=False):
+        aux_total = 0.0
+        kvs = []
+
+        def mk_body():
+            def body(carry, lp):
+                hh, aux = carry
+                hh, a, kv = _mla_block(lp, cfg, hh, mesh=mesh, dp_axes=dp_axes)
+                return (_c(hh), aux + a), kv if collect_kv else None
+            return jax.checkpoint(body, prevent_cse=False) if remat != "none" else body
+
+        (h, aux_total), kv_d = jax.lax.scan(mk_body(), (h, 0.0),
+                                            params["dense_layers"])
+        (h, aux_total), kv_m = jax.lax.scan(mk_body(), (h, aux_total),
+                                            params["moe_layers"])
+        return h, aux_total, (kv_d, kv_m)
+
+    def loss(params, batch):
+        tok = batch["tokens"]
+        h = _c(params["embed"][tok].astype(jnp.bfloat16))
+        h, aux, _ = backbone(params, h)
+        hn = L.rms_norm(h, params["final_norm"])
+        tgt = jnp.pad(tok[:, 1:], ((0, 0), (0, 1)))
+        mask = jnp.pad(jnp.ones_like(tok[:, 1:], jnp.float32), ((0, 0), (0, 1)))
+        ce = chunked_ce(params, cfg, hn, tgt, mask)
+        metrics = {"ce": ce, "aux": aux}
+        total = ce + aux
+        if cfg.mtp:
+            # MTP: predict t+2 from [h_t ; emb_{t+1}]
+            emb_next = jnp.pad(params["embed"][tok][:, 1:], ((0, 0), (0, 1), (0, 0)))
+            hm = jnp.concatenate([h.astype(jnp.float32), emb_next], -1)
+            hm = (hm.astype(CDTYPE) @ params["mtp"]["proj"].astype(CDTYPE))
+            hm, _, _ = _mla_block(params["mtp"]["block"], cfg,
+                                  hm.astype(jnp.bfloat16), mesh=mesh,
+                                  dp_axes=dp_axes)
+            hm = L.rms_norm(hm, params["mtp"]["norm"])
+            tgt2 = jnp.pad(tok[:, 2:], ((0, 0), (0, 2)))
+            mask2 = jnp.pad(jnp.ones_like(tok[:, 2:], jnp.float32),
+                            ((0, 0), (0, 2)))
+            mtp_ce = chunked_ce(params, cfg, hm, tgt2, mask2)
+            metrics["mtp_ce"] = mtp_ce
+            total = total + 0.3 * mtp_ce
+        return total, metrics
+
+    def prefill(params, batch):
+        tok = batch["tokens"]
+        h = params["embed"][tok].astype(jnp.bfloat16)
+        h, _, (kv_d, kv_m) = backbone(params, h, collect_kv=True)
+        hn = L.rms_norm(h, params["final_norm"])
+        logits = _head(params, cfg, hn[:, -1:])[:, 0]
+        cache = {"dense": {"c_kv": kv_d[0], "k_rope": kv_d[1]},
+                 "moe": {"c_kv": kv_m[0], "k_rope": kv_m[1]}}
+        return logits, cache
+
+    def init_cache(batch, max_len):
+        m = cfg.mla
+        def mk(n):
+            return {"c_kv": jnp.zeros((n, batch, max_len, m.kv_lora), jnp.bfloat16),
+                    "k_rope": jnp.zeros((n, batch, max_len, m.rope_dim), jnp.bfloat16)}
+        return {"dense": mk(nd), "moe": mk(nm)}
+
+    def decode_step(params, cache, token, cur_len):
+        h = params["embed"][token][:, None, :].astype(jnp.bfloat16)
+
+        def body(hh, ins):
+            lp, ck, kr = ins
+            hh, nc = _mla_block_decode(lp, cfg, hh, {"c_kv": ck, "k_rope": kr},
+                                       cur_len, mesh=mesh, dp_axes=dp_axes)
+            return _c(hh), (nc["c_kv"], nc["k_rope"])
+
+        h, (ck_d, kr_d) = jax.lax.scan(body, h, (params["dense_layers"],
+                                                 cache["dense"]["c_kv"],
+                                                 cache["dense"]["k_rope"]))
+        h, (ck_m, kr_m) = jax.lax.scan(body, h, (params["moe_layers"],
+                                                 cache["moe"]["c_kv"],
+                                                 cache["moe"]["k_rope"]))
+        hn = L.rms_norm(h, params["final_norm"])
+        logits = _head(params, cfg, hn)[:, 0]
+        return logits, {"dense": {"c_kv": ck_d, "k_rope": kr_d},
+                        "moe": {"c_kv": ck_m, "k_rope": kr_m}}
+
+    return ModelApi(cfg, init, loss, prefill, decode_step, init_cache)
+
+
+# ---------------------------------------------------------------------------
+# family: ssm (mamba2)
+# ---------------------------------------------------------------------------
+
+
+def build_ssm(cfg: ArchConfig, mesh=None, dp_axes=("data",),
+              remat: str = "block") -> ModelApi:
+    _c = make_constrainer(mesh, dp_axes)
+
+    def init(key):
+        ks = jax.random.split(key, cfg.n_layers + 2)
+        layers = jax.vmap(lambda k: _init_mamba_block(k, cfg))(
+            jnp.stack(ks[: cfg.n_layers]))
+        return {"embed": _embed_init(ks[-1], cfg), "layers": layers,
+                "final_norm": jnp.ones((cfg.d_model,), jnp.float32)}
+
+    def loss(params, batch):
+        tok = batch["tokens"]
+        h = _c(params["embed"][tok].astype(jnp.bfloat16))
+        body = lambda hh, lp: (_c(_mamba_block(lp, cfg, hh)), None)
+        if remat != "none":
+            body = jax.checkpoint(body, prevent_cse=False)
+        h, _ = jax.lax.scan(body, h, params["layers"])
+        h = L.rms_norm(h, params["final_norm"])
+        tgt = jnp.pad(tok[:, 1:], ((0, 0), (0, 1)))
+        mask = jnp.pad(jnp.ones_like(tok[:, 1:], jnp.float32), ((0, 0), (0, 1)))
+        ce = chunked_ce(params, cfg, h, tgt, mask)
+        return ce, {"ce": ce}
+
+    def prefill(params, batch):
+        tok = batch["tokens"]
+        h = params["embed"][tok].astype(jnp.bfloat16)
+
+        def body(hh, lp):
+            hh, st = _mamba_block(lp, cfg, hh, return_state=True)
+            return hh, st
+
+        h, states = jax.lax.scan(body, h, params["layers"])
+        h = L.rms_norm(h, params["final_norm"])
+        logits = _head(params, cfg, h[:, -1:])[:, 0]
+        return logits, states
+
+    def init_cache(batch, max_len):
+        h0, c0 = M.init_mamba_state(cfg, batch, jnp.bfloat16)
+        return (jnp.broadcast_to(h0, (cfg.n_layers,) + h0.shape),
+                jnp.broadcast_to(c0, (cfg.n_layers,) + c0.shape))
+
+    def decode_step(params, cache, token, cur_len):
+        h = params["embed"][token][:, None, :].astype(jnp.bfloat16)
+
+        def body(hh, ins):
+            lp, st_h, st_c = ins
+            hh, st = _mamba_block_decode(lp, cfg, hh, (st_h, st_c))
+            return hh, st
+
+        h, states = jax.lax.scan(body, h, (params["layers"],) + tuple(cache))
+        h = L.rms_norm(h, params["final_norm"])
+        logits = _head(params, cfg, h)[:, 0]
+        return logits, states
+
+    return ModelApi(cfg, init, loss, prefill, decode_step, init_cache)
+
+
+# ---------------------------------------------------------------------------
+# family: hybrid (jamba)
+# ---------------------------------------------------------------------------
+
+
+def build_hybrid(cfg: ArchConfig, mesh=None, dp_axes=("data",),
+                 remat: str = "block") -> ModelApi:
+    G = cfg.n_layers // cfg.attn_every         # groups
+    per = cfg.attn_every                        # layers per group
+    off = cfg.attn_offset
+    n_mamba = per - 1
+    moe_pos = [i for i in range(per) if i % 2 == 1] if cfg.moe.every_other \
+        else list(range(per))
+    mlp_pos = [i for i in range(per) if i not in moe_pos]
+    _c = make_constrainer(mesh, dp_axes)
+
+    def init_group(key):
+        ks = jax.random.split(key, 4)
+        return {
+            "mamba": jax.vmap(lambda k: _init_mamba_block(k, cfg))(
+                jax.random.split(ks[0], n_mamba)),
+            "attn": {"attn": A.init_attention(ks[1], cfg),
+                     "n1": jnp.ones((cfg.d_model,), jnp.float32)},
+            "moe": jax.vmap(lambda k: MOE.init_moe(k, cfg))(
+                jax.random.split(ks[2], len(moe_pos))),
+            "mlp": jax.vmap(lambda k: L.init_mlp(k, cfg))(
+                jax.random.split(ks[3], len(mlp_pos))),
+            "ffn_norms": jnp.ones((per, cfg.d_model), jnp.float32),
+        }
+
+    def init(key):
+        ks = jax.random.split(key, G + 3)
+        groups = jax.vmap(init_group)(jnp.stack(ks[:G]))
+        p = {"embed": _embed_init(ks[-1], cfg), "groups": groups,
+             "final_norm": jnp.ones((cfg.d_model,), jnp.float32)}
+        if not cfg.tie_embeddings:
+            p["lm_head"] = L.dense_init(ks[-2], cfg.d_model, cfg.vocab_padded)
+        return p
+
+    def group_fwd(gp, h, *, collect=False):
+        aux = 0.0
+        mi = ei = oi = 0
+        kv = None
+        states = []
+        for i in range(per):
+            if i == off:
+                a = A.attention_forward(
+                    gp["attn"]["attn"], cfg,
+                    L.rms_norm(h, gp["attn"]["n1"]), kind="causal",
+                    return_kv=collect)
+                if collect:
+                    a, kv = a
+                h = h + a
+            else:
+                lp = jax.tree.map(lambda x: x[mi], gp["mamba"])
+                if collect:
+                    h, st = _mamba_block(lp, cfg, h, return_state=True)
+                    states.append(st)
+                else:
+                    h = _mamba_block(lp, cfg, h)
+                mi += 1
+            hn = L.rms_norm(h, gp["ffn_norms"][i])
+            if i in moe_pos:
+                mp = jax.tree.map(lambda x: x[oi], gp["moe"])
+                f, a2 = MOE.moe_forward(mp, cfg, hn, mesh=mesh, dp_axes=dp_axes)
+                aux = aux + a2
+                oi += 1
+            else:
+                mp = jax.tree.map(lambda x: x[ei], gp["mlp"])
+                f = L.mlp(mp, cfg, hn)
+                ei += 1
+            h = _c(h + f)
+        if collect:
+            st_h = jnp.stack([s[0] for s in states])
+            st_c = jnp.stack([s[1] for s in states])
+            return h, aux, (kv, (st_h, st_c))
+        return h, aux
+
+    def loss(params, batch):
+        tok = batch["tokens"]
+        h = _c(params["embed"][tok].astype(jnp.bfloat16))
+        body = lambda c, gp: ((lambda r: (r[0], c[1] + r[1]))(group_fwd(gp, c[0])), None)
+        if remat != "none":
+            body = jax.checkpoint(body, prevent_cse=False)
+        (h, aux), _ = jax.lax.scan(body, (h, 0.0), params["groups"])
+        h = L.rms_norm(h, params["final_norm"])
+        tgt = jnp.pad(tok[:, 1:], ((0, 0), (0, 1)))
+        mask = jnp.pad(jnp.ones_like(tok[:, 1:], jnp.float32), ((0, 0), (0, 1)))
+        ce = chunked_ce(params, cfg, h, tgt, mask)
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    def prefill(params, batch):
+        tok = batch["tokens"]
+        h = params["embed"][tok].astype(jnp.bfloat16)
+
+        def body(hh, gp):
+            hh, _, (kv, st) = group_fwd(gp, hh, collect=True)
+            return hh, (kv, st)
+
+        h, (kvs, sts) = jax.lax.scan(body, h, params["groups"])
+        h = L.rms_norm(h, params["final_norm"])
+        logits = _head(params, cfg, h[:, -1:])[:, 0]
+        return logits, {"kv": {"k": kvs[0], "v": kvs[1]}, "ssm": sts}
+
+    def init_cache(batch, max_len):
+        h0, c0 = M.init_mamba_state(cfg, batch, jnp.bfloat16)
+        return {"kv": {"k": jnp.zeros((G, batch, max_len, cfg.n_kv_heads,
+                                       cfg.hd), jnp.bfloat16),
+                       "v": jnp.zeros((G, batch, max_len, cfg.n_kv_heads,
+                                       cfg.hd), jnp.bfloat16)},
+                "ssm": (jnp.broadcast_to(h0, (G, n_mamba) + h0.shape),
+                        jnp.broadcast_to(c0, (G, n_mamba) + c0.shape))}
+
+    def group_decode(gp, h, kv, st, cur_len):
+        mi = ei = oi = 0
+        new_st_h, new_st_c = [], []
+        new_kv = kv
+        for i in range(per):
+            if i == off:
+                a, new_kv = A.attention_decode(
+                    gp["attn"]["attn"], cfg, L.rms_norm(h, gp["attn"]["n1"]),
+                    kv, cur_len)
+                h = h + a
+            else:
+                lp = jax.tree.map(lambda x: x[mi], gp["mamba"])
+                s = (st[0][mi], st[1][mi])
+                h, ns = _mamba_block_decode(lp, cfg, h, s)
+                new_st_h.append(ns[0])
+                new_st_c.append(ns[1])
+                mi += 1
+            hn = L.rms_norm(h, gp["ffn_norms"][i])
+            if i in moe_pos:
+                mp = jax.tree.map(lambda x: x[oi], gp["moe"])
+                f, _ = MOE.moe_forward(mp, cfg, hn, mesh=mesh, dp_axes=dp_axes)
+                oi += 1
+            else:
+                mp = jax.tree.map(lambda x: x[ei], gp["mlp"])
+                f = L.mlp(mp, cfg, hn)
+                ei += 1
+            h = h + f
+        return h, new_kv, (jnp.stack(new_st_h), jnp.stack(new_st_c))
+
+    def decode_step(params, cache, token, cur_len):
+        h = params["embed"][token][:, None, :].astype(jnp.bfloat16)
+
+        def body(hh, ins):
+            gp, kc, vc, sh, sc = ins
+            hh, nkv, nst = group_decode(gp, hh, {"k": kc, "v": vc},
+                                        (sh, sc), cur_len)
+            return hh, (nkv["k"], nkv["v"], nst[0], nst[1])
+
+        h, (nk, nv, nsh, nsc) = jax.lax.scan(
+            body, h, (params["groups"], cache["kv"]["k"], cache["kv"]["v"],
+                      cache["ssm"][0], cache["ssm"][1]))
+        h = L.rms_norm(h, params["final_norm"])
+        logits = _head(params, cfg, h)[:, 0]
+        return logits, {"kv": {"k": nk, "v": nv}, "ssm": (nsh, nsc)}
+
+    return ModelApi(cfg, init, loss, prefill, decode_step, init_cache)
+
+
+# ---------------------------------------------------------------------------
+# family: encdec (seamless)
+# ---------------------------------------------------------------------------
+
+
+def build_encdec(cfg: ArchConfig, mesh=None, dp_axes=("data",),
+                 remat: str = "block") -> ModelApi:
+    _c = make_constrainer(mesh, dp_axes)
+
+    def _init_enc_block(key):
+        return _init_dense_block(key, cfg)
+
+    def _init_dec_block(key):
+        init_n, _ = _norm_fns(cfg)
+        ks = jax.random.split(key, 6)
+        return {"attn": A.init_attention(ks[0], cfg),
+                "xattn": A.init_attention(ks[1], cfg),
+                "mlp": L.init_mlp(ks[2], cfg),
+                "n1": init_n(ks[3], cfg.d_model),
+                "nx": init_n(ks[4], cfg.d_model),
+                "n2": init_n(ks[5], cfg.d_model)}
+
+    def init(key):
+        ks = jax.random.split(key, 5)
+        enc = jax.vmap(_init_enc_block)(jax.random.split(ks[0], cfg.enc_layers))
+        dec = jax.vmap(_init_dec_block)(jax.random.split(ks[1], cfg.n_layers))
+        return {"embed": _embed_init(ks[2], cfg), "enc": enc, "dec": dec,
+                "enc_norm": jnp.ones((cfg.d_model,), jnp.float32),
+                "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+                "lm_head": L.dense_init(ks[3], cfg.d_model, cfg.vocab_padded)}
+
+    def encode(params, src):
+        h = src.astype(jnp.bfloat16)
+        body = lambda hh, lp: (_c(_dense_block(lp, cfg, hh, kind="full")), None)
+        if remat != "none":
+            body = jax.checkpoint(body, prevent_cse=False)
+        h, _ = jax.lax.scan(body, h, params["enc"])
+        return L.rms_norm(h, params["enc_norm"])
+
+    def dec_block(lp, h, mem, collect=False):
+        h = h + A.attention_forward(lp["attn"], cfg, L.rms_norm(h, lp["n1"]),
+                                    kind="causal")
+        x = A.attention_forward(lp["xattn"], cfg, L.rms_norm(h, lp["nx"]),
+                                memory=mem, return_kv=collect)
+        if collect:
+            x, ckv = x
+        h = h + x
+        h = h + L.mlp(lp["mlp"], cfg, L.rms_norm(h, lp["n2"]))
+        return (h, ckv) if collect else h
+
+    def loss(params, batch):
+        mem = encode(params, batch["src_embeds"])
+        tok = batch["tokens"]
+        h = params["embed"][tok].astype(jnp.bfloat16)
+        body = lambda hh, lp: (_c(dec_block(lp, hh, mem)), None)
+        if remat != "none":
+            body = jax.checkpoint(body, prevent_cse=False)
+        h, _ = jax.lax.scan(body, h, params["dec"])
+        h = L.rms_norm(h, params["final_norm"])
+        tgt = jnp.pad(tok[:, 1:], ((0, 0), (0, 1)))
+        mask = jnp.pad(jnp.ones_like(tok[:, 1:], jnp.float32), ((0, 0), (0, 1)))
+        ce = chunked_ce(params, cfg, h, tgt, mask)
+        return ce, {"ce": ce}
+
+    def prefill(params, batch):
+        """Encode source + run decoder over the prompt tokens, caching both
+        self-attn KV and cross-attn KV (computed once from memory)."""
+        mem = encode(params, batch["src_embeds"])
+        tok = batch["tokens"]
+        h = params["embed"][tok].astype(jnp.bfloat16)
+
+        def body(hh, lp):
+            hh2 = hh + A.attention_forward(lp["attn"], cfg,
+                                           L.rms_norm(hh, lp["n1"]),
+                                           kind="causal")
+            # self kv for cache
+            _, skv = A.attention_forward(lp["attn"], cfg,
+                                         L.rms_norm(hh, lp["n1"]),
+                                         kind="causal", return_kv=True)
+            x, ckv = A.attention_forward(lp["xattn"], cfg,
+                                         L.rms_norm(hh2, lp["nx"]),
+                                         memory=mem, return_kv=True)
+            hh2 = hh2 + x
+            hh2 = hh2 + L.mlp(lp["mlp"], cfg, L.rms_norm(hh2, lp["n2"]))
+            return hh2, (skv, ckv)
+
+        h, (skv, ckv) = jax.lax.scan(body, h, params["dec"])
+        h = L.rms_norm(h, params["final_norm"])
+        logits = _head(params, cfg, h[:, -1:])[:, 0]
+        return logits, {"self": {"k": skv[0], "v": skv[1]},
+                        "cross": {"k": ckv[0], "v": ckv[1]}}
+
+    def init_cache(batch, max_len, enc_len=1024):
+        zs = lambda s: jnp.zeros(s, jnp.bfloat16)
+        return {"self": {"k": zs((cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)),
+                         "v": zs((cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd))},
+                "cross": {"k": zs((cfg.n_layers, batch, enc_len, cfg.n_kv_heads, cfg.hd)),
+                          "v": zs((cfg.n_layers, batch, enc_len, cfg.n_kv_heads, cfg.hd))}}
+
+    def decode_step(params, cache, token, cur_len):
+        h = params["embed"][token][:, None, :].astype(jnp.bfloat16)
+
+        def body(hh, ins):
+            lp, sk, sv, ck, cv = ins
+            a, nself = A.attention_decode(lp["attn"], cfg,
+                                          L.rms_norm(hh, lp["n1"]),
+                                          {"k": sk, "v": sv}, cur_len)
+            hh = hh + a
+            x, _ = A.attention_decode(lp["xattn"], cfg,
+                                      L.rms_norm(hh, lp["nx"]),
+                                      {"k": ck, "v": cv}, cur_len, cross=True)
+            hh = hh + x
+            hh = hh + L.mlp(lp["mlp"], cfg, L.rms_norm(hh, lp["n2"]))
+            return hh, (nself["k"], nself["v"])
+
+        h, (nk, nv) = jax.lax.scan(body, h, (params["dec"],
+                                             cache["self"]["k"], cache["self"]["v"],
+                                             cache["cross"]["k"], cache["cross"]["v"]))
+        h = L.rms_norm(h, params["final_norm"])
+        logits = _head(params, cfg, h)[:, 0]
+        return logits, {"self": {"k": nk, "v": nv}, "cross": cache["cross"]}
+
+    return ModelApi(cfg, init, loss, prefill, decode_step, init_cache)
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_model(cfg: ArchConfig, mesh=None, dp_axes=("data",),
+                remat: str = "block") -> ModelApi:
+    fam = {"dense": build_dense, "vlm": build_dense, "moe": build_moe,
+           "ssm": build_ssm, "hybrid": build_hybrid, "encdec": build_encdec}
+    return fam[cfg.family](cfg, mesh=mesh, dp_axes=dp_axes, remat=remat)

@@ -1,0 +1,189 @@
+"""Mamba-2 SSD (state-space duality) block.
+
+Chunked SSD algorithm (Dao & Gu, arXiv:2405.21060 §6): the sequence is split
+into chunks of Q tokens; within a chunk the output is a masked quadratic
+(attention-like) term, across chunks a low-rank recurrence on the (H, P, N)
+state is scanned.  ``ssd_naive`` is the O(S) sequential oracle used by the
+property tests; decode is a single state update (the reason mamba2 runs the
+long_500k shape: per-step cost is independent of context length).
+
+Shapes: x (B, S, H, P) heads; A (H,) decay; B/C (B, S, N) (single group);
+dt (B, S, H) softplus-positive step sizes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import CDTYPE, dense_init, rms_norm
+
+
+def init_mamba(key, cfg):
+    sc = cfg.ssm
+    d = cfg.d_model
+    d_inner = sc.expand * d
+    H = d_inner // sc.head_dim
+    ks = jax.random.split(key, 5)
+    # in_proj -> [z (d_inner), x (d_inner), B (N), C (N), dt (H)]
+    d_in_proj = 2 * d_inner + 2 * sc.d_state + H
+    return {
+        "in_proj": dense_init(ks[0], d, d_in_proj),
+        "conv_w": jax.random.normal(ks[1], (sc.d_conv, d_inner + 2 * sc.d_state),
+                                    jnp.float32) * 0.2,
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[2], d_inner, d),
+    }
+
+
+def _causal_conv(xbc, conv_w, conv_state=None):
+    """Depthwise causal conv over (B, S, C); optional carried state
+    (B, d_conv-1, C) for decode.  Returns (out, new_state)."""
+    k = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], 1)
+    out = sum(full[:, i:i + xbc.shape[1]] * conv_w[i][None, None]
+              for i in range(k))
+    return jax.nn.silu(out), full[:, -(k - 1):]
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, *, chunk: int, init_state=None):
+    """Chunked SSD scan.  x (B,S,H,P), dt (B,S,H), A (H,), Bm/Cm (B,S,N).
+    Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bsz, S, H, Pd = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    nc = S // Q
+    assert S % Q == 0, (S, Q)
+    xd = (x * dt[..., None]).reshape(Bsz, nc, Q, H, Pd)      # dt-weighted input
+    dA = (dt * (-jnp.exp(A))[None, None, :]).reshape(Bsz, nc, Q, H)  # (B,nc,Q,H) <=0
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+    seg = jnp.cumsum(dA, axis=2)                             # within-chunk cumsum
+    total = seg[:, :, -1, :]                                 # (B,nc,H)
+
+    # ---- intra-chunk (quadratic) term ------------------------------------
+    # decay(q, k) = exp(seg_q - seg_k) for q >= k
+    rel = seg[:, :, :, None, :] - seg[:, :, None, :, :]      # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    # clamp BEFORE exp: masked (q<k) entries have rel>0 and would overflow,
+    # poisoning the backward with 0*inf = NaN
+    rel = jnp.where(causal[None, None, :, :, None], rel, -1e9)
+    gamma = jnp.exp(rel)
+    cb = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc,
+                    preferred_element_type=jnp.float32)      # (B,nc,Q,Q)
+    y_intra = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", cb, gamma, xd,
+                         preferred_element_type=jnp.float32)
+
+    # ---- chunk states + inter-chunk recurrence ---------------------------
+    # state_c = sum_k exp(total - seg_k) * B_k x_k   (contribution of chunk c)
+    w = jnp.exp(total[:, :, None, :] - seg)                  # (B,nc,Q,H)
+    st = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", Bc, w, xd,
+                    preferred_element_type=jnp.float32)      # (B,nc,H,P,N)
+
+    def scan_fn(h, inputs):
+        st_c, tot_c = inputs                                 # (B,H,P,N), (B,H)
+        h_out = h                                            # state BEFORE chunk c
+        h_new = h * jnp.exp(tot_c)[:, :, None, None] + st_c
+        return h_new, h_out
+
+    h0 = (jnp.zeros((Bsz, H, Pd, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    h_fin, h_prev = jax.lax.scan(scan_fn, h0,
+                                 (jnp.moveaxis(st, 1, 0), jnp.moveaxis(total, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                      # (B,nc,H,P,N)
+
+    # ---- inter-chunk term: y += C_q exp(seg_q) h_prev ---------------------
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", Cc, jnp.exp(seg), h_prev,
+                         preferred_element_type=jnp.float32)
+    y = (y_intra + y_inter).reshape(Bsz, S, H, Pd)
+    return y.astype(x.dtype), h_fin
+
+
+def ssd_naive(x, dt, A, Bm, Cm, *, init_state=None):
+    """Sequential O(S) oracle: h_t = h_{t-1} e^{dt_t A} + dt_t B_t x_t."""
+    Bsz, S, H, Pd = x.shape
+    N = Bm.shape[-1]
+    h0 = (jnp.zeros((Bsz, H, Pd, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        decay = jnp.exp(dtt * (-jnp.exp(A)))[:, :, None, None]   # (B,H,1,1)
+        h = h * decay + (dtt[..., None] * xt)[..., None] * bt[:, None, None, :]
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h
+
+
+def mamba_forward(params, cfg, u, *, init_state=None, conv_state=None,
+                  return_state=False):
+    """Full-sequence forward.  u (B, S, D)."""
+    sc = cfg.ssm
+    d_inner = sc.expand * cfg.d_model
+    H = d_inner // sc.head_dim
+    B_, S, _ = u.shape
+    proj = u.astype(CDTYPE) @ params["in_proj"].astype(CDTYPE)
+    # split: z (d_inner) | xBC (d_inner + 2N) | dt (H)
+    z = proj[..., :d_inner]
+    xBC = proj[..., d_inner: 2 * d_inner + 2 * sc.d_state]
+    dt_raw = proj[..., 2 * d_inner + 2 * sc.d_state:]
+    xBC, new_conv = _causal_conv(xBC, params["conv_w"], conv_state)
+    xs = xBC[..., :d_inner].reshape(B_, S, H, sc.head_dim)
+    Bm = xBC[..., d_inner: d_inner + sc.d_state].astype(jnp.float32)
+    Cm = xBC[..., d_inner + sc.d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    y, h = ssd_chunked(xs.astype(jnp.float32), dt, params["A_log"], Bm, Cm,
+                       chunk=sc.chunk, init_state=init_state)
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B_, S, d_inner)
+    y = rms_norm(y, params["norm"]) * jax.nn.silu(z.astype(jnp.float32))
+    out = (y.astype(CDTYPE) @ params["out_proj"].astype(CDTYPE)).astype(u.dtype)
+    if return_state:
+        return out, (h, new_conv)
+    return out
+
+
+def mamba_decode(params, cfg, u, state):
+    """One-token decode.  u (B, 1, D); state = (h (B,H,P,N), conv (B,k-1,C))."""
+    sc = cfg.ssm
+    d_inner = sc.expand * cfg.d_model
+    H = d_inner // sc.head_dim
+    h, conv_state = state
+    B_ = u.shape[0]
+    proj = u.astype(CDTYPE) @ params["in_proj"].astype(CDTYPE)
+    z = proj[..., :d_inner]
+    xBC = proj[..., d_inner: 2 * d_inner + 2 * sc.d_state]
+    dt_raw = proj[..., 2 * d_inner + 2 * sc.d_state:]
+    xBC, new_conv = _causal_conv(xBC, params["conv_w"], conv_state)
+    xs = xBC[..., :d_inner].reshape(B_, H, sc.head_dim)
+    Bm = xBC[:, 0, d_inner: d_inner + sc.d_state].astype(jnp.float32)
+    Cm = xBC[:, 0, d_inner + sc.d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])
+    decay = jnp.exp(dt * (-jnp.exp(params["A_log"])))[:, :, None, None]
+    h = h * decay + (dt[..., None] * xs.astype(jnp.float32))[..., None] \
+        * Bm[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm) \
+        + params["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B_, 1, d_inner)
+    y = rms_norm(y, params["norm"]) * jax.nn.silu(z.astype(jnp.float32))
+    out = (y.astype(CDTYPE) @ params["out_proj"].astype(CDTYPE)).astype(u.dtype)
+    return out, (h, new_conv)
+
+
+def init_mamba_state(cfg, batch, dtype=jnp.float32):
+    sc = cfg.ssm
+    d_inner = sc.expand * cfg.d_model
+    H = d_inner // sc.head_dim
+    return (jnp.zeros((batch, H, sc.head_dim, sc.d_state), jnp.float32),
+            jnp.zeros((batch, sc.d_conv - 1, d_inner + 2 * sc.d_state), dtype))

@@ -1,0 +1,123 @@
+"""Multi-head Latent Attention (DeepSeek v2/v3).
+
+Train/prefill run the standard "expanded" form; decode runs the ABSORBED
+form: the rank-512 latent c_kv (+ shared rope key) is the entire KV cache,
+W_uk is folded into the query and W_uv into the output projection, so
+per-step attention reads S x (kv_lora + rope_dim) bytes instead of
+S x 2 x H x hd — the production MLA trick, and the reason the DCO-attention
+screening (DESIGN.md §4) composes so well here: stage-1 screening runs on the
+same 512-dim latents.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import CDTYPE, apply_rope, blockwise_attention, dense_init, rms_norm
+
+
+def init_mla(key, cfg):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "wq_a": dense_init(ks[0], d, m.q_lora),
+        "q_norm": jnp.ones((m.q_lora,), jnp.float32),
+        "wq_b": dense_init(ks[1], m.q_lora, H * (m.nope_dim + m.rope_dim)),
+        "wkv_a": dense_init(ks[2], d, m.kv_lora + m.rope_dim),
+        "kv_norm": jnp.ones((m.kv_lora,), jnp.float32),
+        "wk_b": dense_init(ks[3], m.kv_lora, H * m.nope_dim),
+        "wv_b": dense_init(ks[4], m.kv_lora, H * m.v_dim),
+        "wo": dense_init(ks[5], H * m.v_dim, d),
+    }
+
+
+def _project_q(params, cfg, x, positions):
+    m, H = cfg.mla, cfg.n_heads
+    B, S, _ = x.shape
+    xc = x.astype(CDTYPE)
+    ql = rms_norm(xc @ params["wq_a"].astype(CDTYPE), params["q_norm"])
+    q = (ql.astype(CDTYPE) @ params["wq_b"].astype(CDTYPE)
+         ).reshape(B, S, H, m.nope_dim + m.rope_dim)
+    q_nope, q_rope = q[..., : m.nope_dim], q[..., m.nope_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(params, cfg, x, positions):
+    m = cfg.mla
+    xc = x.astype(CDTYPE)
+    kv = xc @ params["wkv_a"].astype(CDTYPE)           # (B, S, kv_lora+rope)
+    c_kv = rms_norm(kv[..., : m.kv_lora], params["kv_norm"])
+    k_rope = apply_rope(kv[..., None, m.kv_lora:], positions, cfg.rope_theta)
+    return c_kv, k_rope[..., 0, :]                     # (B,S,kv_lora), (B,S,rope)
+
+
+def mla_forward(params, cfg, x):
+    """Expanded train/prefill attention; returns (out, (c_kv, k_rope))."""
+    m, H = cfg.mla, cfg.n_heads
+    B, S, _ = x.shape
+    pos = jnp.arange(S)[None, :]
+    q_nope, q_rope = _project_q(params, cfg, x, pos)
+    c_kv, k_rope = _project_kv_latent(params, cfg, x, pos)
+    k_nope = (c_kv.astype(CDTYPE) @ params["wk_b"].astype(CDTYPE)
+              ).reshape(B, S, H, m.nope_dim)
+    v = (c_kv.astype(CDTYPE) @ params["wv_b"].astype(CDTYPE)
+         ).reshape(B, S, H, m.v_dim)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope[:, :, None, :], (B, S, H, m.rope_dim))], -1)
+    # v_dim != qk head_dim: pad v for the shared blockwise kernel, trim after
+    pad = (m.nope_dim + m.rope_dim) - m.v_dim
+    v_p = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad)))
+    out = blockwise_attention(q, k, v_p, kind="causal",
+                              scale=1.0 / np.sqrt(m.nope_dim + m.rope_dim),
+                              block_q=cfg.attn_block_q,
+                              block_kv=cfg.attn_block_kv)
+    out = out[..., : m.v_dim].reshape(B, S, H * m.v_dim)
+    out = (out.astype(CDTYPE) @ params["wo"].astype(CDTYPE)).astype(x.dtype)
+    return out, (c_kv, k_rope)
+
+
+def mla_decode(params, cfg, x, cache, cur_len):
+    """Absorbed one-token decode; cache = {'c_kv' (B,Smax,kv_lora),
+    'k_rope' (B,Smax,rope)}."""
+    m, H = cfg.mla, cfg.n_heads
+    B = x.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(cur_len - 1), (B,))[:, None]
+    q_nope, q_rope = _project_q(params, cfg, x, pos)         # (B,1,H,·)
+    c_new, kr_new = _project_kv_latent(params, cfg, x, pos)  # (B,1,·)
+    idx = jnp.broadcast_to(jnp.asarray(cur_len), (B,)) - 1
+    rows = jnp.arange(B)
+    c_kv = cache["c_kv"].at[rows, idx].set(c_new[:, 0].astype(cache["c_kv"].dtype))
+    k_rope = cache["k_rope"].at[rows, idx].set(
+        kr_new[:, 0].astype(cache["k_rope"].dtype))
+    # absorb W_uk into q:  q_eff[b,h,:] = q_nope[b,h] @ wk_b[h]^T
+    wkb = params["wk_b"].astype(CDTYPE).reshape(m.kv_lora, H, m.nope_dim)
+    q_eff = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0], wkb,
+                       preferred_element_type=jnp.float32)   # (B,H,kv_lora)
+    s = (jnp.einsum("bhl,bsl->bhs", q_eff.astype(CDTYPE), c_kv,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bhr,bsr->bhs", q_rope[:, 0].astype(CDTYPE), k_rope,
+                      preferred_element_type=jnp.float32))
+    s = s / np.sqrt(m.nope_dim + m.rope_dim)
+    valid = jnp.arange(c_kv.shape[1])[None, :] < jnp.broadcast_to(
+        jnp.asarray(cur_len), (B,))[:, None]
+    s = jnp.where(valid[:, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsl->bhl", p.astype(CDTYPE), c_kv,
+                     preferred_element_type=jnp.float32)     # (B,H,kv_lora)
+    # absorb W_uv into the output projection
+    wvb = params["wv_b"].astype(CDTYPE).reshape(m.kv_lora, H, m.v_dim)
+    o = jnp.einsum("bhl,lhv->bhv", ctx.astype(CDTYPE), wvb,
+                   preferred_element_type=jnp.float32)       # (B,H,v_dim)
+    out = (o.reshape(B, 1, H * m.v_dim).astype(CDTYPE)
+           @ params["wo"].astype(CDTYPE)).astype(x.dtype)
+    return out, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def init_mla_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {"c_kv": jnp.zeros((batch, max_len, m.kv_lora), dtype),
+            "k_rope": jnp.zeros((batch, max_len, m.rope_dim), dtype)}

@@ -1,0 +1,2 @@
+from repro.search.ivf import IVFIndex  # noqa: F401
+from repro.search.hnsw import HNSWIndex  # noqa: F401

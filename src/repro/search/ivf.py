@@ -1,0 +1,94 @@
+"""IVF index with pluggable DCO methods (paper §IV-C: IVF on accelerators).
+
+Build: batched-Lloyd k-means over the base vectors -> ``n_list`` partitions.
+Search: rank partitions by centroid distance, take ``nprobe``, run the DCO
+engine over their concatenated candidate lists.
+
+Construction itself can be DCO-accelerated (paper §V-D): the assignment step
+is a top-1 search over centroids, which we route through the same staged
+screening when a method is supplied.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.engine import ScanStats, make_schedule, scan_topk
+
+
+def _kmeans_assign(X, cent, *, method=None, schedule=None, stats=None, block=8192):
+    """Nearest-centroid assignment; optionally DCO-screened (top-1 search)."""
+    n = X.shape[0]
+    out = np.empty(n, np.int64)
+    if method is None:
+        cn = (cent ** 2).sum(1)
+        for lo in range(0, n, block):
+            hi = min(lo + block, n)
+            d2 = cn[None] - 2.0 * X[lo:hi] @ cent.T
+            out[lo:hi] = d2.argmin(1)
+        return out
+    ctx = method.prep_queries(X)               # queries here are the base rows
+    ids = np.arange(cent.shape[0])
+    for i in range(n):
+        # small blocks so the running top-1 threshold starts pruning early
+        _, bi = scan_topk(method, ctx, i, ids, 1, schedule, stats=stats, block=32)
+        out[i] = bi[0]
+    return out
+
+
+class IVFIndex:
+    def __init__(self, n_list: int = 256, *, seed: int = 0, kmeans_iters: int = 10):
+        self.n_list = n_list
+        self.seed = seed
+        self.kmeans_iters = kmeans_iters
+        self.centroids: np.ndarray | None = None
+        self.lists: list | None = None          # list of np.int64 arrays
+        self.n = 0
+
+    # -- construction --------------------------------------------------------
+    def build(self, X: np.ndarray, *, method=None, schedule=None) -> "IVFIndex":
+        """K-means + partition fill.  ``method`` accelerates the assignment
+        DCOs during construction (Fig. 9 scenario); the final layout is
+        identical for all methods (paper App. A: fixed data layout)."""
+        X = np.asarray(X, np.float32)
+        rng = np.random.default_rng(self.seed)
+        n = X.shape[0]
+        k = min(self.n_list, max(1, n // 8))
+        cent = X[rng.choice(n, k, replace=False)].copy()
+        sub = X[rng.choice(n, min(n, 50_000), replace=False)]
+        for _ in range(self.kmeans_iters):           # Lloyd on a training slice
+            a = _kmeans_assign(sub, cent)
+            sums = np.zeros((k, X.shape[1]), np.float64)
+            np.add.at(sums, a, sub)
+            cnt = np.bincount(a, minlength=k).astype(np.float64)
+            upd = cnt > 0
+            cent[upd] = (sums[upd] / cnt[upd, None]).astype(np.float32)
+        # final assignment pass is where DCO acceleration bites (n x k DCOs)
+        assign = _kmeans_assign(X, cent, method=method, schedule=schedule)
+        self.centroids = cent
+        self.lists = [np.where(assign == j)[0].astype(np.int64) for j in range(k)]
+        self.n = n
+        return self
+
+    def insert(self, X_old_n: int, new_ids: np.ndarray, Xnew: np.ndarray,
+               *, method=None, schedule=None):
+        """Dynamic inserts (paper §V-E): assign new vectors to partitions;
+        DCO screening accelerates the assignment."""
+        a = _kmeans_assign(np.asarray(Xnew, np.float32), self.centroids,
+                           method=method, schedule=schedule)
+        for j, gid in zip(a, new_ids):
+            self.lists[j] = np.append(self.lists[j], gid)
+        self.n += len(new_ids)
+
+    # -- search ---------------------------------------------------------------
+    def probe_ids(self, q: np.ndarray, nprobe: int) -> np.ndarray:
+        d2 = ((self.centroids - q) ** 2).sum(1)
+        order = np.argsort(d2)[:nprobe]
+        lists = [self.lists[j] for j in order]
+        return np.concatenate(lists) if lists else np.empty(0, np.int64)
+
+    def search(self, method, ctx, qi: int, q: np.ndarray, k: int, nprobe: int,
+               schedule=None, stats: ScanStats | None = None):
+        cands = self.probe_ids(q, nprobe)
+        if schedule is None:
+            schedule = make_schedule(method.state["D"])
+        return scan_topk(method, ctx, qi, cands, k, schedule, stats=stats)

@@ -1,0 +1,88 @@
+"""DCO-screened attention (beyond-paper): the paper's two-stage pruning
+applied to long-context decode.
+
+Attention at decode IS a vector similarity search: the query vector scans
+every cached key for the largest inner products.  We apply the DCO playbook
+(DESIGN.md §4): keys are cached in a PCA-rotated basis (rotation R fitted on
+key statistics, distance/IP-preserving); stage 1 computes PARTIAL scores on
+the leading d1 rotated dims for all S cached keys; the top-C candidates by
+partial score proceed to stage 2 (exact scores on all dims) and softmax is
+taken over those C only.
+
+Per-step HBM traffic drops from S*hd to S*d1 + C*hd bytes — the same
+bytes-currency win as the retrieval engine, and the reason this composes
+well with MLA (the latent c_kv is already the 'rotated' compressed basis).
+
+This is APPROXIMATE attention (softmax mass outside the top-C is dropped);
+tests/test_dco_attention.py bounds the error against exact attention.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def fit_key_rotation(keys: np.ndarray) -> np.ndarray:
+    """PCA rotation (hd, hd) from sampled key vectors (n, hd)."""
+    k = np.asarray(keys, np.float64)
+    k = k - k.mean(0)
+    cov = k.T @ k / max(1, k.shape[0] - 1)
+    evals, evecs = np.linalg.eigh(cov)
+    return np.ascontiguousarray(evecs[:, ::-1]).astype(np.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("d1", "cap"))
+def dco_decode_attention(q, k_rot_cache, v_cache, rot, cur_len, *,
+                         d1: int = 32, cap: int = 512, scale=None):
+    """q (B, H, hd); k_rot_cache (B, S, Hkv, hd) keys ALREADY in the rotated
+    basis; v_cache (B, S, Hkv, hd); rot (hd, hd).  Returns (B, H, hd).
+    GQA: H = G * Hkv."""
+    B, H, hd = q.shape
+    S, Hkv = k_rot_cache.shape[1], k_rot_cache.shape[2]
+    G = H // Hkv
+    C = min(cap, S)
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    q_rot = jnp.einsum("bhd,de->bhe", q, rot).reshape(B, Hkv, G, hd)
+    # ---- stage 1: partial scores on leading d1 rotated dims ---------------
+    s1 = jnp.einsum("bhgd,bshd->bhgs", q_rot[..., :d1],
+                    k_rot_cache[..., :d1],
+                    preferred_element_type=jnp.float32)
+    pos_ok = jnp.arange(S)[None, None, None, :] < jnp.broadcast_to(
+        jnp.asarray(cur_len), (B,))[:, None, None, None]
+    s1 = jnp.where(pos_ok, s1, -jnp.inf)
+    # ---- top-C screening ---------------------------------------------------
+    _, idx = jax.lax.top_k(s1, C)                       # (B, Hkv, G, C)
+    # ---- stage 2: exact scores for survivors -------------------------------
+    bidx = jnp.arange(B)[:, None, None, None]
+    hidx = jnp.arange(Hkv)[None, :, None, None]
+    k_sel = k_rot_cache[bidx, idx, hidx]                # (B, Hkv, G, C, hd)
+    v_sel = v_cache[bidx, idx, hidx]
+    s2 = jnp.einsum("bhgd,bhgcd->bhgc", q_rot, k_sel,
+                    preferred_element_type=jnp.float32) * scale
+    alive = jnp.take_along_axis(jnp.isfinite(s1), idx, axis=-1)
+    s2 = jnp.where(alive, s2, -jnp.inf)
+    p = jax.nn.softmax(s2, axis=-1)
+    out = jnp.einsum("bhgc,bhgcd->bhgd", p.astype(v_sel.dtype), v_sel,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def exact_decode_attention(q, k_cache, v_cache, cur_len, *, scale=None):
+    """Oracle for the tests: full softmax attention over the cache."""
+    B, H, hd = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    ok = jnp.arange(S)[None, None, None, :] < jnp.broadcast_to(
+        jnp.asarray(cur_len), (B,))[:, None, None, None]
+    s = jnp.where(ok, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, hd).astype(q.dtype)

@@ -1,0 +1,103 @@
+"""Checkpointing: async, atomic, elastic.
+
+Layout: <dir>/step_<n>/{manifest.json, <idx>.npy ...}; a checkpoint is
+valid iff its ``manifest.json`` exists (written LAST, after every tensor) —
+the atomicity marker that makes interrupted saves harmless.
+
+* ``save_async`` snapshots to host memory synchronously (device_get) and
+  writes on a daemon thread: the train loop blocks only for the D2H copy.
+* ``restore`` loads the newest valid step into ANY target shardings — arrays
+  are saved unsharded, so restoring onto a different mesh (elastic
+  scale-up/down, pod loss) is just a device_put with the new specs.
+* ``GC``: keep_last bounds disk usage.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(tree, directory: str, step: int, *, keep_last: int = 3):
+    leaves, _ = _flatten(tree)
+    host = [np.asarray(jax.device_get(x)) for x in leaves]
+    _write(host, directory, step, keep_last)
+
+
+_PENDING: list = []
+
+
+def save_async(tree, directory: str, step: int, *, keep_last: int = 3):
+    """D2H synchronously, disk write on a background thread."""
+    leaves, _ = _flatten(tree)
+    host = [np.asarray(jax.device_get(x)) for x in leaves]
+    t = threading.Thread(target=_write, args=(host, directory, step, keep_last),
+                         daemon=True)
+    t.start()
+    _PENDING.append(t)
+    return t
+
+
+def wait_pending():
+    while _PENDING:
+        _PENDING.pop().join()
+
+
+def _write(host_leaves, directory, step, keep_last):
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    for i, arr in enumerate(host_leaves):
+        np.save(os.path.join(tmp, f"{i}.npy"), arr)
+    meta = {"step": step, "n_leaves": len(host_leaves)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    # GC old checkpoints
+    steps = sorted(latest_steps(directory))
+    for s in steps[:-keep_last]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:010d}"),
+                      ignore_errors=True)
+
+
+def latest_steps(directory):
+    out = []
+    if not os.path.isdir(directory):
+        return out
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, "manifest.json")):
+                out.append(int(name[5:]))
+    return out
+
+
+def restore(template, directory: str, *, shardings=None, step: int | None = None):
+    """Restore newest (or given) step into ``template``'s structure.
+    ``shardings``: optional pytree of NamedSharding for the TARGET mesh —
+    this is the elastic-rescale path."""
+    steps = latest_steps(directory)
+    if not steps:
+        return None, -1
+    step = max(steps) if step is None else step
+    d = os.path.join(directory, f"step_{step:010d}")
+    leaves, treedef = _flatten(template)
+    host = [np.load(os.path.join(d, f"{i}.npy")) for i in range(len(leaves))]
+    if shardings is not None:
+        sh_leaves = jax.tree.leaves(
+            shardings, is_leaf=lambda s: isinstance(s, jax.sharding.Sharding))
+        host = [jax.device_put(h, s) for h, s in zip(host, sh_leaves)]
+    else:
+        host = [jax.device_put(h.astype(l.dtype) if hasattr(l, 'dtype') else h)
+                for h, l in zip(host, leaves)]
+    return jax.tree.unflatten(treedef, host), step

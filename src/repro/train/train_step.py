@@ -1,0 +1,99 @@
+"""train_step builder: mixed precision, microbatching, gradient compression.
+
+Distributed-optimization tricks (brief §2):
+  * bf16 parameter cast before the backward pass => the FSDP grad
+    reduce-scatters/all-reduces move bf16 bytes (2x collective compression),
+    while AdamW applies them to f32 master params;
+  * microbatch gradient accumulation via lax.scan bounds activation memory
+    independently of the global batch;
+  * remat policy is owned by the model builder ("block" wraps each scanned
+    layer body in jax.checkpoint);
+  * compute/comm overlap comes from XLA latency-hiding scheduling of the
+    scan-structured FSDP all-gathers (we verify collective placement in the
+    dry-run HLO rather than hand-rolling double buffering).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import adamw_init, adamw_update
+
+
+@dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: Any
+
+    def tree_flatten(self):
+        return (self.params, self.opt, self.step), None
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt, s.step), None),
+    lambda aux, kids: TrainState(*kids))
+
+
+def init_state(api, key, *, moment_dtype=jnp.float32) -> TrainState:
+    params = api.init(key)
+    return TrainState(params, adamw_init(params, moment_dtype=moment_dtype),
+                      jnp.zeros((), jnp.int32))
+
+
+def lr_schedule(step, *, peak=3e-4, warmup=100, total=10_000):
+    warm = peak * (step + 1) / warmup
+    frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def make_train_step(api, *, microbatches: int = 1,
+                    grad_dtype=jnp.bfloat16, lr_fn: Callable = lr_schedule,
+                    weight_decay: float = 0.1):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_over(params_half, batch):
+        return api.loss(params_half, batch)
+
+    def train_step(state: TrainState, batch):
+        # bf16 forward/backward params; grads land in bf16 => compressed
+        # collectives on the FSDP reduce path.
+        p_half = jax.tree.map(
+            lambda p: p.astype(grad_dtype) if p.dtype == jnp.float32 else p,
+            state.params)
+
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_over, has_aux=True)(p_half, batch)
+        else:
+            B = jax.tree.leaves(batch)[0].shape[0]
+            mb = B // microbatches
+            batch_m = jax.tree.map(
+                lambda x: x.reshape((microbatches, mb) + x.shape[1:]), batch)
+
+            def acc_fn(carry, mbatch):
+                (l0, g0) = carry
+                (l, m), g = jax.value_and_grad(loss_over, has_aux=True)(
+                    p_half, mbatch)
+                g = jax.tree.map(jnp.add, g0, g)
+                return (l0 + l, g), m
+
+            g_init = jax.tree.map(jnp.zeros_like, p_half)
+            (loss, grads), ms = jax.lax.scan(acc_fn, (0.0, g_init), batch_m)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+
+        lr = lr_fn(state.step)
+        new_params, new_opt, gnorm = adamw_update(
+            state.params, grads, state.opt, lr=lr, weight_decay=weight_decay)
+        metrics = dict(metrics, loss=loss, gnorm=gnorm, lr=lr)
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step

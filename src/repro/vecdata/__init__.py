@@ -1,0 +1,1 @@
+from repro.vecdata.synthetic import DATASETS, VectorDataset, load_dataset  # noqa: F401

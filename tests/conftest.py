@@ -1,0 +1,16 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see the real
+single CPU device; only the dry-run sets the 512-device flag (in its own
+process)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def sift_small():
+    from repro.vecdata import load_dataset
+    return load_dataset("sift", scale=0.05)      # 5k x 128
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

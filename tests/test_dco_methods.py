@@ -1,0 +1,95 @@
+"""Behavioural tests for the 8 DCO methods (paper §III semantics)."""
+import numpy as np
+import pytest
+
+from repro.core.engine import ScanStats, make_schedule, scan_topk
+from repro.core.methods import ALL_METHODS, BASELINES, make_method
+from repro.vecdata.synthetic import recall_at_k
+
+K = 10
+NQ = 8
+
+
+def _fit(name, ds, schedule):
+    m = make_method(name).fit(ds.X)
+    if m.needs_training:
+        rng = np.random.default_rng(1)
+        m.train(ds.X[rng.choice(ds.n, 16)], K, schedule)
+    return m
+
+
+@pytest.mark.parametrize("name", list(ALL_METHODS))
+def test_full_scan_topk_recall(name, sift_small):
+    ds = sift_small
+    sched = make_schedule(ds.dim)
+    m = _fit(name, ds, sched)
+    ctx = m.prep_queries(ds.Q[:NQ])
+    gt, _ = ds.ground_truth(K)
+    found = []
+    stats = ScanStats()
+    for qi in range(NQ):
+        _, ids = scan_topk(m, ctx, qi, np.arange(ds.n), K, sched, stats=stats)
+        found.append(ids)
+    rec = recall_at_k(np.array(found), gt[:NQ])
+    if m.exact:
+        assert rec == 1.0, f"{name} must be exact, got {rec}"
+    else:
+        assert rec >= 0.95, f"{name} recall {rec} too low"
+    if name != "FDScanning":
+        assert stats.pruning_ratio > 0.2, f"{name} prunes nothing"
+
+
+def test_exact_methods_agree(sift_small):
+    ds = sift_small
+    sched = make_schedule(ds.dim)
+    res = {}
+    for name in BASELINES:
+        m = _fit(name, ds, sched)
+        ctx = m.prep_queries(ds.Q[:4])
+        d, i = scan_topk(m, ctx, 0, np.arange(ds.n), K, sched)
+        res[name] = (d, i)
+    for name in BASELINES[1:]:
+        np.testing.assert_allclose(res[name][0], res["FDScanning"][0], rtol=1e-4)
+
+
+def test_append_consistency(sift_small):
+    """Dynamic insert (paper §V-E): append == refit for scanning methods."""
+    ds = sift_small
+    half = ds.n // 2
+    sched = make_schedule(ds.dim)
+    m = make_method("PDScanning+").fit(ds.X[:half])
+    m.append(ds.X[half:])
+    m2 = make_method("PDScanning+", pca=m.state["pca"]).fit(ds.X)
+    ctx, ctx2 = m.prep_queries(ds.Q[:2]), m2.prep_queries(ds.Q[:2])
+    d1, i1 = scan_topk(m, ctx, 0, np.arange(ds.n), K, sched)
+    d2, i2 = scan_topk(m2, ctx2, 0, np.arange(ds.n), K, sched)
+    np.testing.assert_allclose(d1, d2, rtol=1e-4)
+    assert set(i1) == set(i2)
+
+
+def test_ip_metric_via_normalization(sift_small):
+    """Eq. 8: IP on normalized vectors == monotone transform of L2."""
+    ds = sift_small.normalized()
+    q = ds.Q[0]
+    ip = ds.X @ q
+    d2 = ((ds.X - q) ** 2).sum(1)
+    np.testing.assert_allclose(ip, 1.0 - 0.5 * d2 * (q @ q + 1) / (q @ q + 1),
+                               atol=1e-3)
+    # top-k by IP == top-k by L2 on normalized data
+    k_ip = set(np.argsort(-ip)[:K].tolist())
+    k_l2 = set(np.argsort(d2)[:K].tolist())
+    assert k_ip == k_l2
+
+
+def test_pruning_increases_with_dim_on_pca(sift_small):
+    """More scanned dims => (weakly) more pruning for PDScanning+."""
+    ds = sift_small
+    m = make_method("PDScanning+").fit(ds.X)
+    ctx = m.prep_queries(ds.Q[:4])
+    gt, gtd = ds.ground_truth(K)
+    tau = float(gtd[0, -1])
+    keep16, _ = m.screen(np.arange(ds.n), ctx, 0, 16, tau)
+    keep64, _ = m.screen(np.arange(ds.n), ctx, 0, 64, tau)
+    assert keep64.sum() <= keep16.sum()
+    # exactness: every true neighbor survives
+    assert keep64[gt[0]].all()

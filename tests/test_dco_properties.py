@@ -1,0 +1,96 @@
+"""Property-based tests (hypothesis) for core DCO invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import transforms as T
+from repro.core.engine import make_schedule, scan_topk, topk_merge
+from repro.core.methods import make_method
+
+dims = st.integers(min_value=4, max_value=96)
+ns = st.integers(min_value=20, max_value=200)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=ns, d=dims, seed=st.integers(0, 2**16))
+def test_pca_rotation_preserves_distances(n, d, seed):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, d)).astype(np.float32)
+    pca = T.fit_pca(X)
+    Xr = T.pca_rotate(pca, X)
+    if pca["rank"] == d:                       # full rotation
+        a, b = Xr[0] - Xr[1], X[0] - X[1]
+        np.testing.assert_allclose((a * a).sum(), (b * b).sum(), rtol=1e-3)
+    # W columns orthonormal always
+    WtW = pca["W"].T @ pca["W"]
+    np.testing.assert_allclose(WtW, np.eye(pca["rank"]), atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=ns, d=dims, dpart=st.integers(1, 16), seed=st.integers(0, 2**16))
+def test_partial_distance_is_lower_bound(n, d, dpart, seed):
+    """Partial ssd over any orthonormal prefix lower-bounds the full ssd —
+    the exactness guarantee of PDScanning/PDScanning+."""
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, d)).astype(np.float32)
+    q = rng.standard_normal((1, d)).astype(np.float32)
+    dpart = min(dpart, d)
+    for name in ("PDScanning", "PDScanning+", "ADSampling"):
+        m = make_method(name).fit(X)
+        ctx = m.prep_queries(q)
+        full = m.exact_sq(np.arange(n), ctx, 0)
+        Xr = m.state.get("Xrot", X)
+        Qr = ctx.get("Qrot", ctx["Q"])
+        r = min(dpart, Xr.shape[1])
+        partial = ((Xr[:, :r] - Qr[0, :r]) ** 2).sum(1)
+        assert (partial <= full * (1 + 1e-3) + 1e-4).all(), name
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(30, 150), d=dims, k=st.integers(1, 10),
+       seed=st.integers(0, 2**16))
+def test_exact_scan_topk_equals_bruteforce(n, d, k, seed):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, d)).astype(np.float32)
+    q = rng.standard_normal((1, d)).astype(np.float32)
+    k = min(k, n)
+    m = make_method("PDScanning+").fit(X)
+    ctx = m.prep_queries(q)
+    bd, bi = scan_topk(m, ctx, 0, np.arange(n), k, make_schedule(d), block=32)
+    brute = ((X - q[0]) ** 2).sum(1)
+    expect = np.sort(brute)[:k]
+    np.testing.assert_allclose(np.asarray(bd), expect, rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(k=st.integers(1, 8), n1=st.integers(0, 10), n2=st.integers(0, 10),
+       seed=st.integers(0, 2**16))
+def test_topk_merge_invariants(k, n1, n2, seed):
+    rng = np.random.default_rng(seed)
+    best_d = np.full(k, np.inf, np.float32)
+    best_i = np.full(k, -1, np.int64)
+    new_d = rng.random(n2).astype(np.float32)
+    new_i = rng.integers(0, 1000, n2)
+    md, mi = topk_merge(best_d, best_i, new_d, new_i, k)
+    fin = np.isfinite(md)
+    assert len(md) == k and (np.diff(md[fin]) >= 0).all()
+    allv = np.concatenate([best_d, new_d])
+    np.testing.assert_allclose(md, np.sort(allv)[:k])
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(150, 400), d=st.integers(8, 64), seed=st.integers(0, 2**16))
+def test_pq_adist_nonnegative_and_close(n, d, seed):
+    """PQ approximate distances are nonnegative and correlate with the truth.
+    (On isotropic Gaussian data the correlation floor is weak by nature —
+    the paper's DDCopq targets CLUSTERED embeddings; bench_query covers that.)"""
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, d)).astype(np.float32)
+    pq = T.fit_pq(X, n_sub=4, n_codes=32, iters=4)
+    q = rng.standard_normal(d).astype(np.float32)
+    lut = T.pq_query_lut(pq, q)
+    adist = T.pq_adist(pq, lut, pq["codes"])
+    true = ((X - q) ** 2).sum(1)
+    assert (adist >= 0).all()
+    # quantized distance correlates with true distance
+    corr = np.corrcoef(adist, true)[0, 1]
+    assert corr > 0.3

@@ -1,0 +1,155 @@
+"""Oracle equivalence tests for the nontrivial layers:
+  * SSD chunked scan == naive sequential recurrence (+ hypothesis sweep)
+  * SSD decode step == one step of the naive recurrence
+  * MLA absorbed decode == expanded attention on the same prefix
+  * MoE capacity-unbounded == dense top-k routing reference
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import smoke_config
+from repro.models import mamba2 as M
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models.layers import CDTYPE
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# SSD
+# ---------------------------------------------------------------------------
+
+
+def _ssd_inputs(rng, B, S, H, P, N):
+    x = jnp.asarray(rng.standard_normal((B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (B, S, H)), jnp.float32)
+    A = jnp.asarray(np.log(rng.uniform(0.5, 4.0, H)), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B, S, N)), jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((B, S, N)), jnp.float32)
+    return x, dt, A, Bm, Cm
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_ssd_chunked_equals_naive(chunk):
+    rng = np.random.default_rng(0)
+    x, dt, A, Bm, Cm = _ssd_inputs(rng, 2, 16, 3, 4, 5)
+    y1, h1 = M.ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk)
+    y2, h2 = M.ssd_naive(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-3,
+                               atol=2e-3)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=2e-3,
+                               atol=2e-3)
+
+
+@settings(max_examples=12, deadline=None)
+@given(B=st.integers(1, 3), nc=st.integers(1, 4), H=st.integers(1, 4),
+       P=st.integers(1, 6), N=st.integers(1, 6), seed=st.integers(0, 2**16))
+def test_ssd_chunked_hypothesis(B, nc, H, P, N, seed):
+    rng = np.random.default_rng(seed)
+    S = nc * 8
+    x, dt, A, Bm, Cm = _ssd_inputs(rng, B, S, H, P, N)
+    y1, h1 = M.ssd_chunked(x, dt, A, Bm, Cm, chunk=8)
+    y2, h2 = M.ssd_naive(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=5e-3,
+                               atol=5e-3)
+
+
+def test_mamba_prefill_then_decode_matches_full():
+    """forward(S+1) == forward(S) -> decode(1) via carried state."""
+    cfg = smoke_config("mamba2-130m")
+    p = M.init_mamba(KEY, cfg)
+    rng = np.random.default_rng(0)
+    B, S = 2, 33
+    u = jnp.asarray(rng.standard_normal((B, S, cfg.d_model)), jnp.float32)
+    # full forward over S (chunk must divide: use naive-compatible path)
+    out_full = None
+    # run prefill on first S-1, then decode the last token
+    y_pre, (h, conv) = M.mamba_forward(p, cfg, u[:, : S - 1], return_state=True)
+    y_dec, _ = M.mamba_decode(p, cfg, u[:, S - 1 :], (h, conv))
+    # reference: same via naive full pass
+    cfg_big = dataclasses.replace(cfg, ssm=dataclasses.replace(cfg.ssm, chunk=S))
+    y_all = M.mamba_forward(p, cfg_big, u)
+    np.testing.assert_allclose(np.asarray(y_dec[:, 0]), np.asarray(y_all[:, -1]),
+                               rtol=0.05, atol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# MLA
+# ---------------------------------------------------------------------------
+
+
+def test_mla_absorbed_decode_equals_expanded():
+    cfg = smoke_config("deepseek-v2-236b")
+    p = MLA.init_mla(KEY, cfg)
+    rng = np.random.default_rng(0)
+    B, S = 2, 9
+    x = jnp.asarray(rng.standard_normal((B, S, cfg.d_model)), jnp.float32)
+    out_full, (c_kv, k_rope) = MLA.mla_forward(p, cfg, x)
+    # decode path: prefix S-1 into the cache, decode token S-1
+    cache = MLA.init_mla_cache(cfg, B, S, dtype=jnp.float32)
+    out_dec = None
+    for t in range(S):
+        out_dec, cache = MLA.mla_decode(p, cfg, x[:, t : t + 1], cache, t + 1)
+    np.testing.assert_allclose(np.asarray(out_dec[:, 0], np.float32),
+                               np.asarray(out_full[:, -1], np.float32),
+                               rtol=0.08, atol=0.08)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+
+def _dense_moe_reference(params, cfg, x):
+    """sum over top-k experts of gate * expert(x) — no capacity drops."""
+    mc = cfg.moe
+    T, D = x.shape
+    logits = x.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    vals, idx = jax.lax.top_k(probs, mc.top_k)
+    vals = vals / vals.sum(-1, keepdims=True)
+    out = jnp.zeros((T, D), jnp.float32)
+    for e in range(mc.n_experts):
+        gate_e = jnp.where((idx == e).any(-1),
+                           jnp.where(idx == e, vals, 0.0).sum(-1), 0.0)
+        xc = x.astype(CDTYPE)
+        h = (jax.nn.silu(xc @ params["wg"][e].astype(CDTYPE))
+             * (xc @ params["wu"][e].astype(CDTYPE)))
+        y = (h @ params["wd"][e].astype(CDTYPE)).astype(jnp.float32)
+        out = out + gate_e[:, None] * y
+    return out
+
+
+def test_moe_matches_dense_reference_when_uncapped():
+    cfg = smoke_config("deepseek-v2-236b")
+    mc = dataclasses.replace(cfg.moe, capacity_factor=100.0)  # no drops
+    cfg = dataclasses.replace(cfg, moe=mc)
+    p = MOE.init_moe(KEY, cfg)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, 8, cfg.d_model)), jnp.float32)
+    out, aux = MOE.moe_forward(p, cfg, x)            # local path
+    if mc.n_shared:
+        sp = p["shared"]
+        xc = x.astype(CDTYPE)
+        h = jax.nn.silu(xc @ sp["wg"].astype(CDTYPE)) * (xc @ sp["wu"].astype(CDTYPE))
+        out = out - (h @ sp["wd"].astype(CDTYPE)).astype(x.dtype)
+    ref = _dense_moe_reference(p, cfg, x.reshape(-1, cfg.d_model))
+    np.testing.assert_allclose(np.asarray(out).reshape(-1, cfg.d_model),
+                               np.asarray(ref), rtol=0.05, atol=0.05)
+
+
+def test_moe_capacity_drops_bounded():
+    """With cf=1.0, dropped fraction is bounded and aux loss is finite."""
+    cfg = smoke_config("deepseek-v2-236b")
+    p = MOE.init_moe(KEY, cfg)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((4, 16, cfg.d_model)), jnp.float32)
+    out, aux = MOE.moe_forward(p, cfg, x)
+    assert np.isfinite(np.asarray(out)).all()
+    assert np.isfinite(float(aux))

@@ -1,0 +1,100 @@
+"""Per-architecture smoke tests (brief deliverable f): reduced same-family
+config, one forward/train step on CPU, asserts output shapes + no NaNs.
+Also prefill->decode consistency for every family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_arch, smoke_config
+from repro.models import build_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=32, rng_seed=0):
+    rng = np.random.default_rng(rng_seed)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["src_embeds"] = jnp.asarray(
+            rng.standard_normal((B, 16, cfg.d_model)), jnp.float32)
+    if cfg.family == "vlm" and cfg.prefix_len:
+        batch["patches"] = jnp.asarray(
+            rng.standard_normal((B, cfg.prefix_len, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_train_step(arch):
+    cfg = smoke_config(arch)
+    api = build_model(cfg, remat="none")
+    params = api.init(KEY)
+    loss, metrics = jax.jit(api.loss)(params, _batch(cfg))
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{arch}: loss={loss}"
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_full_config_is_exact(arch):
+    """The FULL config (exercised via dry-run only) matches the assignment."""
+    cfg = get_arch(arch)
+    spec = {
+        "qwen3-32b": (64, 5120, 64, 8, 25600, 151936),
+        "olmo-1b": (16, 2048, 16, 16, 8192, 50304),
+        "qwen3-4b": (36, 2560, 32, 8, 9728, 151936),
+        "starcoder2-7b": (32, 4608, 36, 4, 18432, 49152),
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+        "deepseek-v2-236b": (60, 5120, 128, 128, None, 102400),
+        "deepseek-v3-671b": (61, 7168, 128, 128, None, 129280),
+        "mamba2-130m": (24, 768, 0, 0, 0, 50280),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+        "paligemma-3b": (18, 2048, 8, 1, 16384, 257216),
+    }[arch]
+    L, d, h, kv, ff, vocab = spec
+    assert cfg.n_layers == L and cfg.d_model == d and cfg.vocab == vocab
+    assert cfg.n_heads == h and cfg.n_kv_heads == kv
+    if ff is not None:
+        assert cfg.d_ff == ff
+    if arch.startswith("deepseek"):
+        assert cfg.mla is not None and cfg.mla.kv_lora == 512
+        assert cfg.moe.n_experts == (160 if "v2" in arch else 256)
+        assert cfg.moe.top_k == (6 if "v2" in arch else 8)
+    if arch == "jamba-v0.1-52b":
+        assert cfg.moe.n_experts == 16 and cfg.moe.top_k == 2
+        assert cfg.attn_every == 8
+    if arch == "mamba2-130m":
+        assert cfg.ssm.d_state == 128
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "olmo-1b", "deepseek-v2-236b",
+                                  "mamba2-130m", "jamba-v0.1-52b",
+                                  "paligemma-3b", "seamless-m4t-large-v2"])
+def test_prefill_decode_consistency(arch):
+    """Prefill over S tokens == feeding the same tokens through decode_step
+    one at a time (the correctness backbone for KV/SSM caches)."""
+    cfg = smoke_config(arch)
+    api = build_model(cfg, remat="none")
+    params = api.init(KEY)
+    B, S, MAX = 2, 12, 24
+    batch = _batch(cfg, B, S)
+    logits_pre, _ = jax.jit(api.prefill)(params, batch)
+
+    cache = api.init_cache(B, MAX)
+    decode = jax.jit(api.decode_step)
+    toks = np.asarray(batch["tokens"])
+    logits = None
+    for t in range(S):
+        logits, cache = decode(params, cache, jnp.asarray(toks[:, t]), t + 1)
+    # VLM prefill prepends patches that token-decode can't replay; skip value
+    # check there but still verify shapes/finiteness.
+    assert logits.shape == logits_pre.shape
+    assert np.isfinite(np.asarray(logits)).all()
+    if cfg.family not in ("vlm", "encdec"):
+        np.testing.assert_allclose(np.asarray(logits, np.float32),
+                                   np.asarray(logits_pre, np.float32),
+                                   rtol=0.15, atol=0.2)
+        # greedy agreement on the real vocab
+        a = np.argmax(np.asarray(logits)[:, :cfg.vocab], -1)
+        b = np.argmax(np.asarray(logits_pre)[:, :cfg.vocab], -1)
+        assert (a == b).mean() >= 0.5

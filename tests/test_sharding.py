@@ -1,0 +1,85 @@
+"""Sharding-rule tests: every spec divides its dim for every architecture on
+the production mesh shapes (no devices needed — rules only read mesh.shape)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, get_arch
+from repro.configs import sharding as SH
+from repro.models import build_model
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+POD = FakeMesh({"data": 16, "model": 16})
+MULTI = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _axsize(mesh, axes):
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+@pytest.mark.parametrize("mesh,fsdp", [(POD, ("data",)),
+                                       (MULTI, ("pod", "data"))])
+def test_param_specs_divisible(arch, mesh, fsdp):
+    cfg = get_arch(arch)
+    api = build_model(cfg)
+    shapes = jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0)))
+    specs = SH.param_specs(shapes, mesh, fsdp=fsdp)
+
+    def check(path, sds, spec):
+        assert len(spec) <= len(sds.shape), (path, sds.shape, spec)
+        for i, axes in enumerate(spec):
+            if axes is None:
+                continue
+            assert sds.shape[i] % _axsize(mesh, axes) == 0, \
+                (arch, path, sds.shape, spec)
+
+    flat_s = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    flat_p = jax.tree.leaves(specs, is_leaf=lambda s: isinstance(s, P))
+    assert len(flat_s) == len(flat_p)
+    for (path, sds), spec in zip(flat_s, flat_p):
+        check(jax.tree_util.keystr(path), sds, spec)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-32b", "deepseek-v3-671b"])
+def test_big_tensors_are_sharded(arch):
+    """The big 2D weights must NOT replicate on the pod mesh."""
+    cfg = get_arch(arch)
+    api = build_model(cfg)
+    shapes = jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0)))
+    specs = SH.param_specs(shapes, POD, fsdp=("data",))
+    flat_s = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    flat_p = jax.tree.leaves(specs, is_leaf=lambda s: isinstance(s, P))
+    worst_repl = 0
+    for (path, sds), spec in zip(flat_s, flat_p):
+        n = 1
+        for d in sds.shape:
+            n *= d
+        if n < 1_000_000:
+            continue
+        sharded = any(a is not None for a in spec)
+        assert sharded, (jax.tree_util.keystr(path), sds.shape)
+
+
+def test_cache_specs_long_context():
+    """batch=1 long-context cache shards the sequence axis instead."""
+    import jax.numpy as jnp
+    cache = {"k": jax.ShapeDtypeStruct((32, 1, 524288, 8, 128), jnp.bfloat16)}
+    specs = SH.cache_specs(cache, POD, dp=("data",))
+    assert specs["k"][2] in (("data",), "data"), specs["k"]
+    cache = {"k": jax.ShapeDtypeStruct((32, 128, 32768, 8, 128), jnp.bfloat16)}
+    specs = SH.cache_specs(cache, POD, dp=("data",))
+    assert specs["k"][1] in (("data",), "data")

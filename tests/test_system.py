@@ -1,0 +1,84 @@
+"""End-to-end behaviour tests for the paper's system.
+
+1. Retrieval stack end-to-end: synthetic corpus -> IVF -> DCO query ->
+   recall + pruning, for a baseline and a SOTA method; the SOTA method
+   must prune strictly more than FDScanning at equal recall.
+2. Paper-claims sanity: the dimensionality-sensitivity direction — pruning
+   ratio on high-D data exceeds pruning on low-D data for PCA methods.
+3. LM stack end-to-end: train a reduced model for a few steps through the
+   resumable driver, then serve it through the engine.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.engine import ScanStats, make_schedule
+from repro.core.methods import make_method
+from repro.search.ivf import IVFIndex
+from repro.vecdata import load_dataset
+from repro.vecdata.synthetic import recall_at_k
+
+K = 10
+
+
+def test_retrieval_end_to_end(sift_small):
+    ds = sift_small
+    idx = IVFIndex(n_list=32).build(ds.X)
+    gt, _ = ds.ground_truth(K)
+    sched = make_schedule(ds.dim)
+    results = {}
+    for name in ("FDScanning", "DDCres"):
+        m = make_method(name).fit(ds.X)
+        ctx = m.prep_queries(ds.Q[:10])
+        stats = ScanStats()
+        found = [idx.search(m, ctx, qi, ds.Q[qi], K, 16, sched, stats)[1]
+                 for qi in range(10)]
+        results[name] = (recall_at_k(np.array(found), gt[:10]), stats)
+    rec_fd, st_fd = results["FDScanning"]
+    rec_res, st_res = results["DDCres"]
+    assert abs(rec_fd - rec_res) < 0.05          # recall preserved (paper)
+    assert st_res.pruning_ratio > st_fd.pruning_ratio + 0.2
+
+
+def test_dimensionality_sensitivity_direction():
+    """Paper finding (1): pruning grows with dimensionality for PCA methods."""
+    lo = load_dataset("deep", scale=0.02)        # D=96
+    hi = load_dataset("gist", scale=0.1)         # D=960
+    ratios = {}
+    for ds in (lo, hi):
+        m = make_method("DDCres").fit(ds.X)
+        ctx = m.prep_queries(ds.Q[:6])
+        stats = ScanStats()
+        from repro.core.engine import scan_topk
+        for qi in range(6):
+            scan_topk(m, ctx, qi, np.arange(ds.n), K,
+                      make_schedule(ds.dim), stats=stats)
+        ratios[ds.name] = stats.pruning_ratio
+    assert ratios["gist"] > ratios["deep"], ratios
+
+
+def test_lm_train_then_serve(tmp_path):
+    from repro.configs import smoke_config
+    from repro.models import build_model
+    from repro.serving.engine import Request, ServingEngine
+    from repro.train.fault import run_resumable
+    from repro.train.train_step import init_state, make_train_step
+    import jax.numpy as jnp
+
+    cfg = smoke_config("qwen3-4b")
+    api = build_model(cfg, remat="none")
+    state = init_state(api, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(api))
+
+    def batch_fn(s):
+        rng = np.random.default_rng(s % 3)       # small cycling corpus
+        return {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (4, 32)),
+                                      jnp.int32)}
+
+    state, last = run_resumable(step, state, batch_fn, steps=8,
+                                ckpt_dir=str(tmp_path), ckpt_every=4)
+    assert last == 7
+    eng = ServingEngine(api, slots=2, max_len=32)
+    out = eng.run(state.params,
+                  [Request(rid=0, prompt=np.array([1, 2, 3]), max_new=4)])
+    assert len(out[0]) == 4
