@@ -10,10 +10,9 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from benchmarks.common import dataset, emit, fmt3, method_for, run_queries
-from repro.core.engine import ScanStats, make_schedule
+from repro.api import SearchSession
+from repro.core.engine import QueryBatch, ScanStats, make_schedule
 from repro.core.methods import make_method
 from repro.search.hnsw import HNSWIndex
 from repro.search.ivf import IVFIndex, _kmeans_assign
@@ -43,8 +42,8 @@ def ivf_construction():
             build_t = time.perf_counter() - t0
             if base_t is None:
                 base_t = build_t
-            m = method_for(ds, "FDScanning", k=K)
-            qps, rec, _, _ = run_queries(ds, m, proto, k=K, nq=8)
+            sess = SearchSession(method_for(ds, "FDScanning", k=K), "ivf", proto)
+            qps, rec, _, _ = run_queries(sess, ds, k=K, nq=8)
             emit(f"construct_ivf/{ds_name}/{name}", 1e6 * build_t / n_assign,
                  assign_s=fmt3(build_t), speedup=fmt3(base_t / build_t),
                  prune=fmt3(stats.pruning_ratio), post_recall=fmt3(rec))
@@ -64,11 +63,10 @@ def hnsw_construction():
         build_t = time.perf_counter() - t0
         if base_t is None:
             base_t = build_t
-        ctx = m.prep_queries(ds.Q[:10])
+        batch = QueryBatch.create(m, ds.Q[:10], sched)
         gt, _ = ds.ground_truth(K)
-        found = [idx.search(m, ctx, qi, K, ef=48, schedule=sched)[1]
-                 for qi in range(10)]
-        rec = recall_at_k(np.array(found), gt[:10])
+        found = [idx.search(m, batch, qi, K, ef=48)[1] for qi in range(10)]
+        rec = recall_at_k(found, gt[:10])
         emit(f"construct_hnsw/gist/{name}", 1e6 * build_t,
              build_s=fmt3(build_t), speedup=fmt3(base_t / build_t),
              prune=fmt3(stats.pruning_ratio), search_recall=fmt3(rec))

@@ -17,7 +17,7 @@ import time
 import numpy as np
 
 from benchmarks.common import emit, fmt3
-from repro.core.engine import make_schedule, scan_topk
+from repro.core.engine import QueryBatch, make_schedule, scan_topk
 from repro.core.methods import make_method
 from repro.vecdata import load_dataset
 from repro.vecdata.synthetic import recall_at_k
@@ -54,7 +54,8 @@ def main():
         for name in ("FDScanning", "PDScanning", "PDScanning+", "ADSampling",
                      "DDCres"):
             m = make_method(name).fit(ds.X)
-            ctx = m.prep_queries(ds.Q[:4])
+            batch = QueryBatch.create(m, ds.Q[:4], sched)
+            ctx = batch.ctx
             tau = float(gtd[0, -1])
             # scalar
             t0 = time.perf_counter()
@@ -63,7 +64,7 @@ def main():
             # batched numpy
             t0 = time.perf_counter()
             for qi in range(4):
-                scan_topk(m, ctx, qi, np.arange(ds.n), K, sched)
+                scan_topk(m, batch, qi, np.arange(ds.n), K)
             t_batch = (time.perf_counter() - t0) / 4
             emit(f"hardware/{ds_name}/{name}", 1e6 * t_batch,
                  scalar_us_per_vec=fmt3(1e6 * t_scalar / len(sub)),

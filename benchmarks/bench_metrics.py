@@ -6,8 +6,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (SCALES, emit, fmt3, method_for, run_queries)
-from repro.core.methods import ALL_METHODS
+from benchmarks.common import SCALES, emit, fmt3, method_for, run_queries
+from repro.api import METHODS, SearchSession
 from repro.search.ivf import IVFIndex
 from repro.vecdata import load_dataset
 
@@ -20,9 +20,9 @@ def main():
         base = load_dataset(ds_name, scale=SCALES.get(ds_name, 0.3))
         ds = base.normalized()          # Eq. 8: IP == 1 - 0.5 d2 on unit norm
         idx = IVFIndex(n_list=64).build(ds.X)
-        for name in ALL_METHODS:
-            m = method_for(ds, name, k=K)
-            qps, rec, stats, us = run_queries(ds, m, idx, k=K, nq=12)
+        for name in METHODS:
+            sess = SearchSession(method_for(ds, name, k=K), "ivf", idx)
+            qps, rec, stats, us = run_queries(sess, ds, k=K, nq=12)
             # verify the transform: L2 top-1 == IP top-1 for a sample query
             q = ds.Q[0]
             ip_top = int(np.argmax(ds.X @ q))

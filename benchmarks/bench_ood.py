@@ -3,8 +3,8 @@
 Validates finding (2): pruning collapses and SOTA QPS degrades on OOD."""
 from __future__ import annotations
 
-from benchmarks.common import dataset, emit, fmt3, ivf_for, method_for, run_queries
-from repro.core.methods import ALL_METHODS
+from benchmarks.common import dataset, emit, fmt3, run_queries, session_for
+from repro.api import METHODS
 
 DATASETS = ("text2image", "laion")
 K = 10
@@ -13,12 +13,11 @@ K = 10
 def main():
     for ds_name in DATASETS:
         ds = dataset(ds_name)
-        idx = ivf_for(ds)
-        for name in ALL_METHODS:
-            m = method_for(ds, name, k=K)
-            qps_in, rec_in, st_in, us_in = run_queries(ds, m, idx, k=K, nq=12)
+        for name in METHODS:
+            sess = session_for(ds, name, k=K)
+            qps_in, rec_in, st_in, us_in = run_queries(sess, ds, k=K, nq=12)
             qps_ood, rec_ood, st_ood, us_ood = run_queries(
-                ds, m, idx, k=K, nq=12, queries=ds.Q_ood)
+                sess, ds, k=K, nq=12, queries=ds.Q_ood)
             emit(f"ood/{ds_name}/{name}", us_ood,
                  qps_in=f"{qps_in:.1f}", qps_ood=f"{qps_ood:.1f}",
                  recall_in=fmt3(rec_in), recall_ood=fmt3(rec_ood),

@@ -1,10 +1,8 @@
 """App. H: initial step size Delta_0 and incremental step Delta_d study."""
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import dataset, emit, fmt3, ivf_for, method_for, run_queries
-from repro.core.engine import make_schedule
+from benchmarks.common import dataset, emit, fmt3, run_queries, session_for
+from repro.api import SchedulePolicy
 
 K = 10
 METHODS = ("PDScanning", "PDScanning+", "ADSampling", "DADE", "DDCres")
@@ -12,22 +10,19 @@ METHODS = ("PDScanning", "PDScanning+", "ADSampling", "DADE", "DDCres")
 
 def main():
     ds = dataset("gist")
-    idx = ivf_for(ds)
     for delta0 in (16, 32, 64, 128):
         for name in METHODS:
-            m = method_for(ds, name, k=K)
-            sched = make_schedule(ds.dim, delta0=delta0, delta_d=64)
-            qps, rec, stats, us = run_queries(ds, m, idx, k=K, nq=10,
-                                              schedule=sched)
+            sess = session_for(ds, name, k=K,
+                               policy=SchedulePolicy(delta0=delta0, delta_d=64))
+            qps, rec, stats, us = run_queries(sess, ds, k=K, nq=10)
             emit(f"params_d0/gist/{name}/d0={delta0}", us,
                  qps=f"{qps:.1f}", recall=fmt3(rec),
                  prune=fmt3(stats.pruning_ratio))
     for delta_d in (32, 64, 160):
         for name in METHODS:
-            m = method_for(ds, name, k=K)
-            sched = make_schedule(ds.dim, delta0=32, delta_d=delta_d)
-            qps, rec, stats, us = run_queries(ds, m, idx, k=K, nq=10,
-                                              schedule=sched)
+            sess = session_for(ds, name, k=K,
+                               policy=SchedulePolicy(delta0=32, delta_d=delta_d))
+            qps, rec, stats, us = run_queries(sess, ds, k=K, nq=10)
             emit(f"params_dd/gist/{name}/dd={delta_d}", us,
                  qps=f"{qps:.1f}", recall=fmt3(rec),
                  prune=fmt3(stats.pruning_ratio))

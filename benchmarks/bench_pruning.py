@@ -3,8 +3,8 @@
 Validates: pruning is dimension-dependent; recall stays ~native."""
 from __future__ import annotations
 
-from benchmarks.common import dataset, emit, fmt3, ivf_for, method_for, run_queries
-from repro.core.methods import ALL_METHODS
+from benchmarks.common import dataset, emit, fmt3, run_queries, session_for
+from repro.api import METHODS
 
 DATASETS = ("deep", "gist", "openai")
 K = 10
@@ -13,10 +13,9 @@ K = 10
 def main():
     for ds_name in DATASETS:
         ds = dataset(ds_name)
-        idx = ivf_for(ds)
-        for name in ALL_METHODS:
-            m = method_for(ds, name, k=K)
-            qps, rec, stats, us = run_queries(ds, m, idx, k=K, nq=12)
+        for name in METHODS:
+            sess = session_for(ds, name, k=K)
+            qps, rec, stats, us = run_queries(sess, ds, k=K, nq=12)
             emit(f"pruning/{ds_name}/{name}", us,
                  prune=fmt3(stats.pruning_ratio), recall=fmt3(rec),
                  dco_true_frac=fmt3(stats.n_true / max(stats.n_dco, 1)))

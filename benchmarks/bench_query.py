@@ -1,14 +1,17 @@
 """Fig. 4/5: query QPS-recall across datasets x all 8 DCO methods (IVF).
 
 Validates finding (1): SOTA DCOs win at moderate D, lose at low D (deep,
-glove) and at ultra-high D (trevi, xultra) where the O(D^2) per-query
-rotation dominates.
+glove) and stop paying at ultra-high D (trevi, xultra) where the O(D^2)
+online rotation dominates.  Runs entirely through the ``repro.api`` facade,
+whose ``search(Q)`` rotates the whole batch in one matmul — the per-query
+rotation FLOPs are unchanged (D^2 each), only fixed call overhead is
+amortized, so the dimensionality trend is measured on the system's real
+serving path.
 """
 from __future__ import annotations
 
-from benchmarks.common import (dataset, emit, fmt3, ivf_for, method_for,
-                               run_queries)
-from repro.core.methods import ALL_METHODS
+from benchmarks.common import dataset, emit, fmt3, run_queries, session_for
+from repro.api import METHODS
 
 DATASETS = ("deep", "glove", "sift", "gist", "openai", "trevi", "xultra")
 K = 10
@@ -17,11 +20,10 @@ K = 10
 def main():
     for ds_name in DATASETS:
         ds = dataset(ds_name)
-        idx = ivf_for(ds)
         base_qps = None
-        for name in ALL_METHODS:
-            m = method_for(ds, name, k=K)
-            qps, rec, stats, us = run_queries(ds, m, idx, k=K, nq=15)
+        for name in METHODS:
+            sess = session_for(ds, name, k=K)
+            qps, rec, stats, us = run_queries(sess, ds, k=K, nq=15)
             if name == "FDScanning":
                 base_qps = qps
             emit(f"query/{ds_name}/{name}", us,

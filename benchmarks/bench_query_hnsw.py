@@ -12,12 +12,9 @@ extreme.  The paper's HNSW wins appear at 1M+ vectors; our IVF suite
 """
 from __future__ import annotations
 
-import time
-
-import numpy as np
-
 from benchmarks.common import emit, fmt3
-from repro.core.engine import ScanStats, make_schedule
+from repro.api import SearchSession
+from repro.core.engine import make_schedule
 from repro.core.methods import make_method
 from repro.search.hnsw import HNSWIndex
 from repro.vecdata import load_dataset
@@ -40,22 +37,15 @@ def main():
         base_qps = None
         for name in METHODS:
             m = make_method(name).fit(ds.X)
-            stats = ScanStats()
-            found = []
-            t0 = time.perf_counter()
-            for qi in range(15):
-                ctx = m.prep_queries(ds.Q[qi:qi + 1])
-                _, ids = idx.search(m, ctx, 0, K, ef=64, schedule=sched,
-                                    stats=stats)
-                found.append(ids)
-            qps = 15 / (time.perf_counter() - t0)
-            rec = recall_at_k(np.array(found), gt[:15])
+            sess = SearchSession(m, "hnsw", idx)
+            res = sess.search(ds.Q[:15], K, ef=64)
+            rec = recall_at_k(res.ids, gt[:15])
             if base_qps is None:
-                base_qps = qps
-            emit(f"query_hnsw/{ds_name}/{name}", 1e6 / qps,
-                 qps=f"{qps:.1f}", recall=fmt3(rec),
-                 prune=fmt3(stats.pruning_ratio),
-                 speedup_vs_fd=fmt3(qps / base_qps))
+                base_qps = res.qps
+            emit(f"query_hnsw/{ds_name}/{name}", 1e6 / res.qps,
+                 qps=f"{res.qps:.1f}", recall=fmt3(rec),
+                 prune=fmt3(res.stats.pruning_ratio),
+                 speedup_vs_fd=fmt3(res.qps / base_qps))
 
 
 if __name__ == "__main__":

@@ -2,7 +2,8 @@
 
 Fig. 11: 60% base HNSW build, 40% inserted in 4 batches — per-batch QPS,
 recall, cumulative update time per method (transforms fitted ONCE on the
-base set; inserts use `append`, never refit — the paper's dynamic setting).
+base set; inserts use the facade's ``add``, never refit — the paper's
+dynamic setting).
 Fig. 12: methods fitted on 1% / 5% / 100% of the data — pruning + recall."""
 from __future__ import annotations
 
@@ -11,9 +12,9 @@ import time
 import numpy as np
 
 from benchmarks.common import emit, fmt3
-from repro.core.engine import ScanStats, make_schedule
+from repro.api import SchedulePolicy, open_index
+from repro.core.engine import QueryBatch, ScanStats, make_schedule, scan_topk
 from repro.core.methods import make_method
-from repro.search.hnsw import HNSWIndex
 from repro.vecdata import load_dataset
 from repro.vecdata.synthetic import recall_at_k
 
@@ -25,27 +26,23 @@ K = 10
 def dynamic_inserts():
     ds = load_dataset("gist", scale=0.05)          # 1.5k vectors
     n_base = int(ds.n * 0.6)
-    sched = make_schedule(ds.dim, delta0=32, delta_d=64)
     batches = np.array_split(np.arange(n_base, ds.n), 4)
     for name in METHODS:
-        m = make_method(name).fit(ds.X[:n_base])
-        idx = HNSWIndex(m=8, ef_construction=32).build(ds.X[:n_base], method=m,
-                                                       schedule=sched)
+        sess = open_index(ds.X[:n_base], index="hnsw", method=name,
+                          schedule=SchedulePolicy(delta0=32, delta_d=64),
+                          index_params={"m": 8, "ef_construction": 32})
         total_update = 0.0
-        for bi, ids in enumerate(batches):
+        for ids in batches:
             t0 = time.perf_counter()
-            idx.insert_batch(m, ds.X[ids], schedule=sched)
+            sess.add(ds.X[ids])
             total_update += time.perf_counter() - t0
         # search after all inserts
-        ctx = m.prep_queries(ds.Q[:10])
-        t0 = time.perf_counter()
-        found = [idx.search(m, ctx, qi, K, ef=48, schedule=sched)[1]
-                 for qi in range(10)]
-        qps = 10 / (time.perf_counter() - t0)
+        res = sess.search(ds.Q[:10], K, ef=48)
         gt, _ = ds.ground_truth(K)
-        rec = recall_at_k(np.array(found), gt[:10])
+        rec = recall_at_k(res.ids, gt[:10])
         emit(f"updates_insert/gist/{name}", 1e6 * total_update,
-             update_s=fmt3(total_update), qps=f"{qps:.1f}", recall=fmt3(rec))
+             update_s=fmt3(total_update), qps=f"{res.qps:.1f}",
+             recall=fmt3(rec))
 
 
 def limited_initial_data():
@@ -60,13 +57,11 @@ def limited_initial_data():
             if m.needs_training:
                 rng = np.random.default_rng(3)
                 m.train(ds.X[rng.choice(n_fit, min(16, n_fit))], K, sched)
-            ctx = m.prep_queries(ds.Q[:10])
             stats = ScanStats()
-            from repro.core.engine import scan_topk
+            batch = QueryBatch.create(m, ds.Q[:10], sched, stats)
             found = []
             for qi in range(10):
-                _, ids = scan_topk(m, ctx, qi, np.arange(ds.n), K, sched,
-                                   stats=stats)
+                _, ids = scan_topk(m, batch, qi, np.arange(ds.n), K)
                 found.append(ids)
             rec = recall_at_k(np.array(found), gt[:10])
             emit(f"updates_limited/gist/{name}/fit{frac}", 0.0,

@@ -1,19 +1,24 @@
-"""Shared benchmark plumbing: dataset/method caches, timing, CSV convention.
+"""Shared benchmark plumbing: dataset/method caches, facade sessions, CSV.
 
 Output convention (benchmarks/run.py): every row is
     name,us_per_call,derived
 where ``derived`` carries the figure-specific metric (recall, pruning ratio,
 speedup, ...) as ``key=value|key=value``.
+
+All query-path benchmarks go through ``repro.api.SearchSession`` — the same
+facade the examples use — so a benchmark is "pick a session, call
+``run_queries``".  Methods and IVF layouts are cached per dataset because
+every figure sweeps all 8 methods over one shared index (paper App. A:
+identical data layout across methods).
 """
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
+from repro.api import SearchSession, SchedulePolicy
 from repro.core import transforms as T
-from repro.core.engine import ScanStats, make_schedule, scan_topk
-from repro.core.methods import ALL_METHODS, make_method
+from repro.core.engine import make_schedule
+from repro.core.methods import make_method
 from repro.search.ivf import IVFIndex
 from repro.vecdata import load_dataset
 from repro.vecdata.synthetic import recall_at_k
@@ -62,27 +67,27 @@ def ivf_for(ds, n_list=64):
     return _IVF_CACHE[ds.name]
 
 
-def run_queries(ds, m, idx, *, k=10, nprobe=16, nq=20, schedule=None,
-                queries=None, per_query_prep=True):
-    """Returns (qps, recall, stats, us_per_query) including the paper's
-    per-query online pre-processing cost (prep batch of 1)."""
-    Q = ds.Q[:nq] if queries is None else queries[:nq]
-    schedule = schedule or make_schedule(ds.dim)
-    stats = ScanStats()
-    found = []
-    t0 = time.perf_counter()
-    for qi in range(len(Q)):
-        if per_query_prep:
-            ctx = m.prep_queries(Q[qi:qi + 1])
-            d, ids = idx.search(m, ctx, 0, Q[qi], k, nprobe, schedule, stats)
-        else:
-            ctx = m.prep_queries(Q)
-            d, ids = idx.search(m, ctx, qi, Q[qi], k, nprobe, schedule, stats)
-        found.append(ids)
-    dt = time.perf_counter() - t0
+def session_for(ds, name, *, k=10, index="ivf", backend="host",
+                policy: SchedulePolicy | None = None) -> SearchSession:
+    """Facade session over the cached method + shared index for ``ds``.
+    HNSW graphs aren't cached here (host builds are slow) — construct those
+    explicitly, as bench_query_hnsw does."""
+    if index not in ("ivf", "flat"):
+        raise ValueError(f"session_for caches ivf/flat only, got {index!r}")
+    m = method_for(ds, name, k=k)
+    idx = ivf_for(ds) if index == "ivf" else None
+    return SearchSession(m, index, idx, backend, policy)
+
+
+def run_queries(sess: SearchSession, ds, *, k=10, nprobe=16, nq=20,
+                queries=None):
+    """One batched facade search; returns (qps, recall, stats, us_per_query)
+    including the batch-amortized online pre-processing cost."""
+    Q = (ds.Q if queries is None else queries)[:nq]
+    res = sess.search(Q, k, nprobe=nprobe)
     gt, _ = ds.ground_truth(k, ood=queries is not None)
-    rec = recall_at_k(np.array(found), gt[:len(Q)])
-    return len(Q) / dt, rec, stats, 1e6 * dt / len(Q)
+    rec = recall_at_k(res.ids, gt[:len(Q)])
+    return res.qps, rec, res.stats, 1e6 * res.wall_time_s / len(Q)
 
 
 def emit(name, us, **derived):

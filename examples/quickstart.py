@@ -1,21 +1,17 @@
-"""Quickstart: the paper's subject end to end in ~40 lines.
+"""Quickstart: the paper's subject end to end through the facade.
 
-Builds a synthetic embedding corpus, fits three DCO methods (one per paper
-category), builds an IVF index, and compares QPS / recall / pruning —
-the smallest faithful slice of the benchmark.
+Builds a synthetic embedding corpus, opens one session per DCO method
+(one per paper category), and compares QPS / recall / pruning — then A/Bs
+the same exact method on the host and JAX backends, which is the whole
+point of the unified API.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import sys
-import time
-
-import numpy as np
 
 sys.path.insert(0, "src")
 
-from repro.core.engine import ScanStats, make_schedule
-from repro.core.methods import make_method
-from repro.search.ivf import IVFIndex
+from repro.api import open_index
 from repro.vecdata import load_dataset
 from repro.vecdata.synthetic import recall_at_k
 
@@ -23,24 +19,24 @@ from repro.vecdata.synthetic import recall_at_k
 def main():
     ds = load_dataset("gist", scale=0.2)          # 6k x 960 image embeddings
     print(f"dataset: {ds.name}  N={ds.n}  D={ds.dim}")
-    idx = IVFIndex(n_list=64).build(ds.X)
     gt, _ = ds.ground_truth(10)
-    sched = make_schedule(ds.dim)
 
     for name in ("FDScanning", "PDScanning+", "DDCres"):
-        m = make_method(name).fit(ds.X)
-        stats = ScanStats()
-        found = []
-        t0 = time.perf_counter()
-        for qi in range(20):
-            ctx = m.prep_queries(ds.Q[qi:qi + 1])      # per-query O(D^2) prep
-            _, ids = idx.search(m, ctx, 0, ds.Q[qi], 10, nprobe=16,
-                                schedule=sched, stats=stats)
-            found.append(ids)
-        qps = 20 / (time.perf_counter() - t0)
-        rec = recall_at_k(np.array(found), gt[:20])
-        print(f"{name:12s}  QPS={qps:7.1f}  recall@10={rec:.3f}  "
-              f"dims pruned={stats.pruning_ratio:.1%}")
+        sess = open_index(ds.X, index="ivf", method=name,
+                          index_params={"n_list": 64})
+        res = sess.search(ds.Q[:20], 10, nprobe=16)
+        rec = recall_at_k(res.ids, gt[:20])
+        print(f"{name:12s}  QPS={res.qps:7.1f}  recall@10={rec:.3f}  "
+              f"dims pruned={res.stats.pruning_ratio:.1%}")
+
+    # host vs device is an A/B flag, not a second API
+    for backend in ("host", "jax"):
+        sess = open_index(ds.X, index="flat", method="PDScanning+",
+                          backend=backend)
+        sess.search(ds.Q[:20], 10)                # warm up (jit compile)
+        res = sess.search(ds.Q[:20], 10)
+        rec = recall_at_k(res.ids, gt[:20])
+        print(f"flat/{backend:4s}    QPS={res.qps:7.1f}  recall@10={rec:.3f}")
 
 
 if __name__ == "__main__":

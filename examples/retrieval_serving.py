@@ -1,8 +1,11 @@
-"""Distributed retrieval serving: the paper's engine on a device mesh.
+"""Distributed retrieval serving: the paper's engine on a device mesh,
+through the facade.
 
-Runs the two-stage DCO engine (PDScanning+-style certified screening) over a
-sharded corpus with a global top-k merge — the production serving path the
-dry-run lowers against 256/512 chips, here on 8 host devices.
+Opens one session with ``backend="jax"`` and a host mesh: the corpus is
+sharded over the mesh, queries are batch-rotated once, and each search runs
+the certified two-stage engine per shard with a global top-k merge — the
+production serving path the dry-run lowers against 256/512 chips, here on
+8 host devices.
 
   PYTHONPATH=src python examples/retrieval_serving.py
 """
@@ -15,14 +18,9 @@ import time
 
 sys.path.insert(0, "src")
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.jax_engine import (DcoEngineConfig, make_distributed_topk,
-                                   two_stage_topk, build_device_state)
-from repro.core.methods import make_method
+from repro.api import SchedulePolicy, open_index
 from repro.launch.mesh import make_host_mesh
 from repro.vecdata import load_dataset
 from repro.vecdata.synthetic import recall_at_k
@@ -30,31 +28,21 @@ from repro.vecdata.synthetic import recall_at_k
 
 def main():
     ds = load_dataset("sift", scale=0.3)          # 30k x 128
-    m = make_method("PDScanning+").fit(ds.X)
-    cfg = DcoEngineConfig(kind="lb", d1=48, k=10, capacity=2048, query_chunk=8)
-    W = jnp.asarray(m.state["pca"]["W"])
-    Q = jnp.asarray(ds.Q[:32]) @ W                # batched O(D^2) prep
-
     mesh = make_host_mesh(4, 2)
-    xr = np.asarray(m.state["Xrot"], np.float32)
-    sh = NamedSharding(mesh, P(("data", "model")))
-    shard = lambda a: jax.device_put(a, sh)
-    args = (shard(xr[:, :cfg.d1]), shard(xr[:, cfg.d1:]),
-            shard((xr[:, :cfg.d1] ** 2).sum(1)),
-            shard((xr[:, cfg.d1:] ** 2).sum(1)),
-            Q[:, :cfg.d1], Q[:, cfg.d1:])
-    fn = jax.jit(make_distributed_topk(mesh, cfg))
-    d, i = fn(*args)                              # compile + run
+    sess = open_index(ds.X, index="flat", method="PDScanning+", backend="jax",
+                      schedule=SchedulePolicy(d1=48, capacity=2048,
+                                              query_chunk=8),
+                      mesh=mesh)
+    res = sess.search(ds.Q[:32], 10)              # compile + run
     t0 = time.perf_counter()
     for _ in range(5):
-        d, i = fn(*args)
-        jax.block_until_ready(d)
+        res = sess.search(ds.Q[:32], 10)
     dt = (time.perf_counter() - t0) / 5
     gt, _ = ds.ground_truth(10)
-    rec = recall_at_k(np.array(i), gt[:32])
+    rec = recall_at_k(np.asarray(res.ids), gt[:32])
     print(f"mesh={dict(mesh.shape)}  corpus={ds.n}x{ds.dim}")
     print(f"batch=32 queries in {dt*1e3:.1f} ms  ({32/dt:.0f} QPS)  "
-          f"recall@10={rec:.3f} (certified two-stage, d1={cfg.d1})")
+          f"recall@10={rec:.3f} (certified two-stage, d1=48)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,16 @@
+"""``repro.api`` — the unified vector-search facade.
+
+One batched Session API over the host (numpy staged-scan) and JAX/Pallas
+(two-stage device) backends:
+
+    from repro.api import open_index
+    sess = open_index(X, index="ivf", method="ADSampling", backend="host")
+    res = sess.search(Q, k=10, nprobe=16)
+    print(res.ids, res.qps, res.stats.pruning_ratio)
+
+See README.md for the method/backend support table.
+"""
+from repro.api.session import (INDEX_KINDS, METHODS, SearchSession,  # noqa: F401
+                               open_index)
+from repro.api.types import SchedulePolicy, SearchResult  # noqa: F401
+from repro.core.engine import QueryBatch, ScanStats  # noqa: F401

@@ -1,0 +1,196 @@
+"""Backend executors behind ``SearchSession``.
+
+``HostBackend`` runs the staged numpy scan (core.engine.scan_topk) over a
+flat corpus, an IVF partition probe, or an HNSW graph walk.  ``JaxBackend``
+runs the batched two-stage device engine (core.jax_engine) over a flat
+corpus — single device or, when a mesh is supplied, sharded with a global
+top-k merge.  Both consume the SAME fitted method state: the host path via
+``method.screen``/``exact_sq``, the device path via the method's uniform
+``device_state()`` export.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.engine import QueryBatch, ScanStats, scan_topk
+
+
+class HostBackend:
+    """Numpy staged-scan execution over flat / IVF / HNSW candidates."""
+
+    name = "host"
+
+    def __init__(self, method, index_kind: str, index, policy):
+        self.method = method
+        self.index_kind = index_kind
+        self.index = index
+        self.policy = policy
+
+    def invalidate(self):           # nothing cached on the host path
+        pass
+
+    def search(self, Q, k: int, *, nprobe: int, ef: int):
+        m = self.method
+        batch = QueryBatch.create(m, Q, self.policy.stage_dims(m.state["D"]))
+        dists = np.empty((len(batch), k), np.float32)
+        ids = np.empty((len(batch), k), np.int64)
+        all_ids = None
+        for qi in range(len(batch)):
+            if self.index_kind == "flat":
+                if all_ids is None:
+                    all_ids = np.arange(m.state["N"])
+                d, i = scan_topk(m, batch, qi, all_ids, k)
+            elif self.index_kind == "ivf":
+                d, i = self.index.search(m, batch, qi, k, nprobe)
+            else:                   # hnsw
+                d, i = self.index.search(m, batch, qi, k, max(ef, k))
+            n = min(k, len(d))
+            dists[qi, :n], ids[qi, :n] = d[:n], i[:n]
+            if n < k:
+                dists[qi, n:], ids[qi, n:] = np.inf, -1
+        return dists, ids, batch.stats
+
+
+class JaxBackend:
+    """Two-stage device engine over a flat corpus (optionally mesh-sharded).
+
+    Lazily materializes the dimension-blocked device arrays from
+    ``method.device_state()`` and rebuilds them after ``invalidate()`` (the
+    session calls it on ``add``).  Query padding to the chunk size is handled
+    inside ``two_stage_topk``, so ragged batches are fine.
+    """
+
+    name = "jax"
+
+    def __init__(self, method, index_kind: str, index, policy, *, mesh=None):
+        if index_kind != "flat":
+            raise ValueError(
+                f"backend='jax' serves index='flat' (got {index_kind!r}); "
+                "IVF probes and HNSW graph walks are host-side indexes")
+        self.method = method
+        self.policy = policy
+        self.mesh = mesh
+        self._dstate = None         # host-side device_state() export
+        self._state = None          # jnp arrays (single-device path)
+        self._shard_args = None     # device_put shards (mesh path)
+        self._mesh_fns: dict = {}   # cfg -> shard_map fn
+
+    # -- state management ---------------------------------------------------
+    def invalidate(self):
+        self._dstate = self._state = self._shard_args = None
+        self._mesh_fns.clear()
+
+    def _materialize(self):
+        from repro.core.jax_engine import build_device_state, rule_scalars
+
+        dstate = self.method.device_state()
+        xr = np.asarray(dstate["Xrot"], np.float32)
+        D = self.method.state["D"]
+        if xr.shape[1] != D:
+            raise ValueError(
+                f"{self.method.name}: rotation rank {xr.shape[1]} < D={D}; "
+                "the device engine needs a full-rank rotation for exact "
+                "stage-2 completion — use backend='host' at this D")
+        self._dstate = dstate
+        self._d1 = min(self.policy.d1, D)
+        if self.mesh is None:
+            self._state = build_device_state(dstate, self._d1)
+        else:
+            import jax
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            sh = NamedSharding(self.mesh, P(tuple(self.mesh.axis_names)))
+            d1 = self._d1
+            self._shard_args = tuple(
+                jax.device_put(v, sh)
+                for v in (xr[:, :d1], xr[:, d1:],
+                          (xr[:, :d1] ** 2).sum(1), (xr[:, d1:] ** 2).sum(1)))
+            self._mesh_extra_state = rule_scalars(dstate, d1)
+
+    def _config(self, k: int):
+        from repro.core.jax_engine import DcoEngineConfig
+
+        ds, p = self._dstate, self.policy
+        kw = dict(kind=ds["kind"], d1=self._d1, k=k, capacity=p.capacity,
+                  query_chunk=p.query_chunk, tau_slack=p.tau_slack)
+        if ds["kind"] == "adsampling":
+            kw["eps0"] = float(ds.get("eps0", 2.1))
+        elif ds["kind"] == "ddcres":
+            kw["m"] = float(ds.get("m", 3.0))
+        elif ds["kind"] == "ratio":
+            kw["theta"] = self._ratio_theta(k)
+        return DcoEngineConfig(**kw)
+
+    def _ratio_theta(self, k: int) -> float:
+        """Largest trained stage <= d1 for the trained k; theta=1.0 (exact
+        lower-bound rule) when no model applies."""
+        models = self._dstate.get("models") or {}
+        trained = [(d, th) for (kk, d), th in models.items()
+                   if kk == self._dstate.get("trained_k") and d <= self._d1]
+        return max(trained)[1] if trained else 1.0
+
+    def _prep_queries(self, Q):
+        """Rotate/center queries into the device basis + DDCres per-query
+        scalars (tail query energy and Eq. 6 variance suffix at d1)."""
+        ds, d1 = self._dstate, self._d1
+        Q = np.atleast_2d(np.asarray(Q, np.float32))
+        Qp = Q - ds["mean"] if ds.get("mean") is not None else Q
+        Qr = Qp @ ds["W"] if ds.get("W") is not None else Qp
+        q_extra = {}
+        if ds["kind"] == "ddcres":
+            qres = np.clip((Qp ** 2).sum(1) - (Qr ** 2).sum(1), 0.0, None)
+            var = ((Qr[:, d1:] ** 2) * ds["sigma_sq"][None, d1:]).sum(1)
+            q_extra = {
+                "qtail_sq": (Qr[:, d1:] ** 2).sum(1) + qres,
+                "var_d1": var + qres * float(ds["tail_var"]),
+            }
+        return Qr[:, :d1], Qr[:, d1:], q_extra
+
+    # -- search --------------------------------------------------------------
+    def search(self, Q, k: int, *, nprobe: int, ef: int):
+        import jax
+        import jax.numpy as jnp
+        from repro.core.jax_engine import make_distributed_topk, two_stage_topk
+
+        if self._dstate is None:
+            self._materialize()
+        cfg = self._config(k)
+        ql, qt, qe = self._prep_queries(Q)
+        nq, N, D = ql.shape[0], self.method.state["N"], self.method.state["D"]
+        stats = ScanStats(n_dco=nq * N, dims_total=float(nq) * N * D)
+        if self.mesh is None:
+            d, i, surv = two_stage_topk(
+                self._state, jnp.asarray(ql), jnp.asarray(qt), cfg,
+                {key: jnp.asarray(v) for key, v in qe.items()})
+            surv = np.asarray(surv)
+        else:
+            if cfg not in self._mesh_fns:
+                self._mesh_fns[cfg] = jax.jit(
+                    make_distributed_topk(self.mesh, cfg,
+                                          tuple(self.mesh.axis_names),
+                                          extra_state=self._mesh_extra_state))
+            d, i = self._mesh_fns[cfg](*self._shard_args,
+                                       jnp.asarray(ql), jnp.asarray(qt),
+                                       {key: jnp.asarray(v)
+                                        for key, v in qe.items()})
+            surv = np.full(nq, min(cfg.capacity, N))    # per-shard upper bound
+        jax.block_until_ready(d)
+        if cfg.kind == "fdscan":
+            stats.dims_scanned = stats.dims_total
+        else:
+            # stage 1 streams d1 dims for every row; stage 2 + the k anchor
+            # completions stream the tail for survivors only
+            stats.dims_scanned = (float(nq) * N * self._d1
+                                  + float(surv.sum() + nq * k) * (D - self._d1))
+            stats.extra["survivors_mean"] = float(surv.mean())
+        return (np.asarray(d, np.float32), np.asarray(i, np.int64), stats)
+
+
+def make_backend(name: str, method, index_kind: str, index, policy, *, mesh=None):
+    if name == "host":
+        if mesh is not None:
+            raise ValueError("mesh sharding is a jax-backend feature")
+        return HostBackend(method, index_kind, index, policy)
+    if name == "jax":
+        return JaxBackend(method, index_kind, index, policy, mesh=mesh)
+    raise ValueError(f"unknown backend {name!r} (expected 'host' or 'jax')")

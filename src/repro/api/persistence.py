@@ -1,0 +1,42 @@
+"""Save/load of fitted sessions.
+
+The fitted state is plain numpy (method state dicts, index arrays), so a
+single pickle payload round-trips everything the online path needs — fit
+once, serve anywhere.  Device arrays are NOT persisted; the jax backend
+re-materializes them lazily from ``device_state()`` on first search.
+"""
+from __future__ import annotations
+
+import pickle
+
+FORMAT_VERSION = 1
+
+
+def save_session(session, path) -> None:
+    payload = {
+        "version": FORMAT_VERSION,
+        "method_name": session.method.name,
+        "method_params": session.method.params,
+        "method_state": session.method.state,
+        "index_kind": session.index_kind,
+        "index": session.index,
+        "policy": session.policy,
+        "backend": session.backend.name,
+    }
+    with open(path, "wb") as f:
+        pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
+
+
+def load_session(path, *, backend: str | None = None, mesh=None):
+    from repro.api.session import SearchSession
+    from repro.core.methods import make_method
+
+    with open(path, "rb") as f:
+        payload = pickle.load(f)
+    if payload.get("version") != FORMAT_VERSION:
+        raise ValueError(f"unsupported session format {payload.get('version')!r}")
+    m = make_method(payload["method_name"], **payload["method_params"])
+    m.state = payload["method_state"]          # fitted state, no refit
+    return SearchSession(m, payload["index_kind"], payload["index"],
+                         backend or payload["backend"], payload["policy"],
+                         mesh=mesh)

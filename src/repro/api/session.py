@@ -1,0 +1,139 @@
+"""The facade: ``open_index(...)`` -> ``SearchSession``.
+
+One entrypoint owns the whole lifecycle the paper's comparison needs —
+method fitting/training, index construction, backend dispatch — so swapping
+a DCO method, an index, or the host/device backend is a keyword argument,
+not a different calling convention:
+
+    sess = open_index(X, index="ivf", method="DADE", backend="host")
+    res = sess.search(Q, k=10, nprobe=16)        # batched; res.ids (nq, k)
+    sess.add(X_new)                              # dynamic inserts, no refit
+    sess.save("idx.bin"); sess = SearchSession.load("idx.bin")
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.api.backends import make_backend
+from repro.api.types import SchedulePolicy, SearchResult
+from repro.core.methods import ALL_METHODS, make_method
+from repro.search.hnsw import HNSWIndex
+from repro.search.ivf import IVFIndex
+
+INDEX_KINDS = ("flat", "ivf", "hnsw")
+#: facade name of every paper method -> backends that can serve it natively.
+#: (Methods not listed under "jax" still run there via the exact lower-bound
+#: fallback of their ``device_state()`` export.)
+METHODS = tuple(ALL_METHODS)
+
+
+class SearchSession:
+    """A fitted method + built index + backend, behind batched calls."""
+
+    def __init__(self, method, index_kind: str, index, backend: str = "host",
+                 policy: SchedulePolicy | None = None, *, mesh=None):
+        if index_kind not in INDEX_KINDS:
+            raise ValueError(f"index must be one of {INDEX_KINDS}, got {index_kind!r}")
+        self.method = method
+        self.index_kind = index_kind
+        self.index = index
+        self.policy = policy if policy is not None else SchedulePolicy()
+        self.backend = make_backend(backend, method, index_kind, index,
+                                    self.policy, mesh=mesh)
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return int(self.method.state["N"])
+
+    @property
+    def dim(self) -> int:
+        return int(self.method.state["D"])
+
+    @property
+    def backend_name(self) -> str:
+        return self.backend.name
+
+    # -- online --------------------------------------------------------------
+    def search(self, Q, k: int = 10, *, nprobe: int = 16, ef: int = 64) -> SearchResult:
+        """Batched top-k for all rows of ``Q``; one online prep for the whole
+        batch (the paper's O(D^2) per-query rotation, amortized)."""
+        t0 = time.perf_counter()
+        dists, ids, stats = self.backend.search(Q, k, nprobe=nprobe, ef=ef)
+        return SearchResult(dists, ids, stats, time.perf_counter() - t0,
+                            self.backend.name)
+
+    def add(self, Xnew) -> "SearchSession":
+        """Dynamic inserts (paper §V-E): extend the fitted method state
+        without refitting transforms, then link/assign into the index."""
+        Xnew = np.atleast_2d(np.asarray(Xnew, np.float32))
+        if self.index_kind == "hnsw":
+            # insert_batch appends to the method itself, then links
+            self.index.insert_batch(self.method, Xnew,
+                                    schedule=self.policy.stage_dims(self.dim))
+        else:
+            start = self.n
+            self.method.append(Xnew)
+            if self.index_kind == "ivf":
+                self.index.insert(np.arange(start, start + Xnew.shape[0]), Xnew)
+        self.backend.invalidate()
+        return self
+
+    # -- persistence ---------------------------------------------------------
+    def save(self, path) -> None:
+        from repro.api.persistence import save_session
+        save_session(self, path)
+
+    @classmethod
+    def load(cls, path, *, backend: str | None = None, mesh=None) -> "SearchSession":
+        from repro.api.persistence import load_session
+        return load_session(path, backend=backend, mesh=mesh)
+
+
+def open_index(X, *, index: str = "flat", method: str = "DADE",
+               backend: str = "host", schedule: SchedulePolicy | None = None,
+               method_params: dict | None = None,
+               index_params: dict | None = None,
+               train_queries=None, train_k: int = 10,
+               seed: int = 0, mesh=None) -> SearchSession:
+    """Fit ``method`` on ``X``, build ``index``, and return a ready session.
+
+    ``method`` is one of the paper's 8 (``repro.api.METHODS``); training-based
+    methods (DDCpca/DDCopq) are trained on ``train_queries`` (default: a
+    sample of X rows) for ``k=train_k``.  ``schedule`` tunes staging on both
+    backends; ``mesh`` (jax backend only) shards the corpus for a distributed
+    global top-k.
+    """
+    X = np.ascontiguousarray(np.atleast_2d(X), np.float32)
+    policy = schedule if schedule is not None else SchedulePolicy()
+    if method not in ALL_METHODS:
+        raise ValueError(f"method must be one of {METHODS}, got {method!r}")
+    if backend == "jax" and index != "flat":
+        # fail before paying for an index the backend can't serve
+        raise ValueError(
+            f"backend='jax' serves index='flat' (got {index!r}); "
+            "IVF probes and HNSW graph walks are host-side indexes")
+    m = make_method(method, **{"seed": seed, **(method_params or {})})
+    m.fit(X)
+    if m.needs_training:
+        if train_queries is None:
+            rng = np.random.default_rng(seed)
+            train_queries = X[rng.choice(X.shape[0], min(24, X.shape[0]),
+                                         replace=False)]
+        m.train(np.asarray(train_queries, np.float32), train_k,
+                policy.stage_dims(X.shape[1]))
+
+    params = dict(index_params or {})
+    if index == "flat":
+        idx = None
+    elif index == "ivf":
+        params.setdefault("n_list", 64)
+        idx = IVFIndex(**params).build(X)
+    elif index == "hnsw":
+        idx = HNSWIndex(**params).build(X, method=m,
+                                        schedule=policy.stage_dims(X.shape[1]))
+    else:
+        raise ValueError(f"index must be one of {INDEX_KINDS}, got {index!r}")
+    return SearchSession(m, index, idx, backend, policy, mesh=mesh)

@@ -1,0 +1,61 @@
+"""Value types of the facade: scheduling policy and search results."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.engine import ScanStats, make_schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulePolicy:
+    """How a session stages its DCO screening, on both backends.
+
+    Host (staged numpy scan): ``delta0``/``delta_d``/``max_stages`` set the
+    paper's (Delta_0, Delta_d) stage dims.  Device (two-stage JAX engine):
+    ``d1`` is the stage-1 lead width, ``capacity`` the per-query stage-2
+    survivor budget, ``query_chunk`` the lax.map batch granularity, and
+    ``tau_slack`` the extra slack on the certified threshold.
+    """
+
+    delta0: int = 32
+    delta_d: int = 64
+    max_stages: int = 4
+    d1: int = 128
+    capacity: int = 2048
+    query_chunk: int = 16
+    tau_slack: float = 1.0
+
+    def stage_dims(self, D: int) -> list:
+        return make_schedule(D, delta0=self.delta0, delta_d=self.delta_d,
+                             max_stages=self.max_stages)
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """Batched search output: row ``i`` answers query ``i``.
+
+    ``dists`` are squared Euclidean distances (the monotone form every method
+    computes in); ``stats`` aggregates DCO work over the whole batch;
+    ``wall_time_s`` is the facade-measured end-to-end time including online
+    query pre-processing.
+    """
+
+    dists: np.ndarray          # (nq, k) float32
+    ids: np.ndarray            # (nq, k) int64
+    stats: ScanStats
+    wall_time_s: float
+    backend: str
+
+    @property
+    def nq(self) -> int:
+        return int(self.ids.shape[0])
+
+    @property
+    def k(self) -> int:
+        return int(self.ids.shape[1])
+
+    @property
+    def qps(self) -> float:
+        return self.nq / max(self.wall_time_s, 1e-12)

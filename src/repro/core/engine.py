@@ -42,6 +42,38 @@ class ScanStats:
         return 1.0 - self.dims_scanned / max(self.dims_total, 1e-9)
 
 
+@dataclass
+class QueryBatch:
+    """One prepped batch of queries flowing through the scan/index layers.
+
+    Bundles the method's online pre-processing output (``ctx``, which holds
+    the raw queries under ``"Q"`` plus any rotated views), the stage schedule,
+    and the per-batch ``ScanStats`` — replacing the loose
+    ``(ctx, qi, q, schedule, stats)`` tuple that every search signature used
+    to thread by hand.
+    """
+
+    ctx: dict
+    schedule: list
+    stats: ScanStats
+
+    @classmethod
+    def create(cls, method, Q, schedule=None, stats: ScanStats | None = None):
+        """Prep ``Q`` with ``method`` and attach a schedule (defaults to the
+        paper's (Delta_0, Delta_d) schedule for the method's D)."""
+        ctx = method.prep_queries(Q)
+        if schedule is None:
+            schedule = make_schedule(method.state["D"])
+        return cls(ctx, list(schedule), stats if stats is not None else ScanStats())
+
+    @property
+    def Q(self):
+        return self.ctx["Q"]
+
+    def __len__(self) -> int:
+        return int(self.ctx["Q"].shape[0])
+
+
 def topk_merge(best_d, best_i, new_d, new_i, k):
     d = np.concatenate([best_d, new_d])
     i = np.concatenate([best_i, new_i])
@@ -50,12 +82,13 @@ def topk_merge(best_d, best_i, new_d, new_i, k):
     return d[order], i[order]
 
 
-def scan_topk(method, ctx, qi, cand_ids, k, schedule=None, *, block: int = 1024,
-              stats: ScanStats | None = None, init_d=None, init_i=None):
-    """DCO-accelerated exact-completion top-k over ``cand_ids``."""
+def scan_topk(method, batch: QueryBatch, qi: int, cand_ids, k, *,
+              block: int = 1024, init_d=None, init_i=None):
+    """DCO-accelerated exact-completion top-k over ``cand_ids`` for query
+    ``qi`` of ``batch``.  Stats accumulate into ``batch.stats``."""
     D = method.state["D"]
-    stages = method.stage_dims(schedule if schedule is not None
-                               else make_schedule(D))
+    ctx, stats = batch.ctx, batch.stats
+    stages = method.stage_dims(batch.schedule)
     best_d = init_d if init_d is not None else np.full(k, np.inf, np.float32)
     best_i = init_i if init_i is not None else np.full(k, -1, np.int64)
     cand_ids = np.asarray(cand_ids, np.int64)

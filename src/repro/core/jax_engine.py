@@ -45,18 +45,16 @@ class DcoEngineConfig:
 
 
 def build_device_state(method_or_arrays, d1: int) -> dict:
-    """Build the dimension-blocked device arrays from a fitted host method
-    (or a raw dict with 'Xrot').  Requires a full-rank rotation so that
-    lead+tail == exact (transforms.fit_pca guarantees rank==D for D<=1024;
-    ADSampling rotations are full rank up to max_rank)."""
+    """Build the dimension-blocked device arrays from a fitted host method's
+    uniform ``device_state()`` export (or a raw dict with 'Xrot').  Requires a
+    full-rank rotation so that lead+tail == exact (transforms.fit_pca
+    guarantees rank==D for D<=1024; ADSampling rotations are full rank up to
+    max_rank)."""
     if isinstance(method_or_arrays, dict):
-        xr = method_or_arrays["Xrot"]
         extras = method_or_arrays
     else:
-        st = method_or_arrays.state
-        xr = st.get("Xrot", st["X"])          # PDScanning/FDScanning: identity
-        extras = st
-    xr = np.asarray(xr, np.float32)
+        extras = method_or_arrays.device_state()
+    xr = np.asarray(extras["Xrot"], np.float32)
     n, D = xr.shape
     d1 = min(d1, D)
     state = {
@@ -65,10 +63,20 @@ def build_device_state(method_or_arrays, d1: int) -> dict:
         "lead_sq": jnp.asarray((xr[:, :d1] ** 2).sum(1)),
         "tail_sq": jnp.asarray((xr[:, d1:] ** 2).sum(1)),
     }
-    if "mass" in extras:        # dade eigen-mass at d1
-        state["mass_d1"] = jnp.float32(max(float(extras["mass"][d1 - 1]), 1e-9))
-        state["eps_d1"] = jnp.float32(float(extras["eps_d"][d1 - 1]))
+    state.update(rule_scalars(extras, d1))
     return state
+
+
+def rule_scalars(extras: dict, d1: int) -> dict:
+    """Per-rule replicated scalars the engine's _estimate needs beyond the
+    dimension-blocked arrays (DADE eigen-mass/slack at d1).  Shared by
+    build_device_state and the mesh path, where the sharded per-device state
+    is assembled inside shard_map and these ride along as constants."""
+    out = {}
+    if "mass" in extras:        # dade eigen-mass at d1
+        out["mass_d1"] = jnp.float32(max(float(extras["mass"][d1 - 1]), 1e-9))
+        out["eps_d1"] = jnp.float32(float(extras["eps_d"][d1 - 1]))
+    return out
 
 
 def rotate_queries(W: jax.Array, Q: jax.Array) -> jax.Array:
@@ -77,7 +85,7 @@ def rotate_queries(W: jax.Array, Q: jax.Array) -> jax.Array:
     return Q @ W
 
 
-def _estimate(cfg: DcoEngineConfig, partial, D, state):
+def _estimate(cfg: DcoEngineConfig, partial, D, state, q_extra):
     d1 = cfg.d1
     if cfg.kind in ("lb", "fdscan"):
         return partial
@@ -88,31 +96,31 @@ def _estimate(cfg: DcoEngineConfig, partial, D, state):
     if cfg.kind == "ratio":
         return partial / cfg.theta
     if cfg.kind == "ddcres":
-        # partial here is the cross-term form; handled by caller via norms
-        return partial
+        # full-distance estimate: lead partial + exact tail norms, minus the
+        # Gaussian slack on the unscanned cross term (core.methods Eq. 7);
+        # per-query scalars arrive via q_extra (see api.backends.device_prep)
+        slack = 2.0 * cfg.m * jnp.sqrt(jnp.maximum(q_extra["var_d1"], 0.0))
+        return (partial + state["tail_sq"][None, :]
+                + q_extra["qtail_sq"][:, None] - slack[:, None])
     raise ValueError(cfg.kind)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def two_stage_topk(state: dict, q_lead: jax.Array, q_tail: jax.Array,
-                   cfg: DcoEngineConfig):
-    """Top-k over the local shard for a batch of (already rotated) queries.
-
-    q_lead (Q, d1), q_tail (Q, D - d1).  Returns (dists_sq (Q,k), ids (Q,k),
-    survivors (Q,) number of stage-2 rows actually alive).
-    """
+def _two_stage_topk_padded(state: dict, q_lead: jax.Array, q_tail: jax.Array,
+                           q_extra: dict, cfg: DcoEngineConfig):
+    """Chunked two-stage top-k; requires nq to divide into query chunks."""
     x_lead, x_tail = state["x_lead"], state["x_tail"]
     n, d1 = x_lead.shape
     D = d1 + x_tail.shape[1]
     k, C = cfg.k, min(cfg.capacity, n)
 
     def one_chunk(qs):
-        ql, qt = qs                                        # (c, d1), (c, Dt)
+        ql, qt, qe = qs                                    # (c, d1), (c, Dt)
         # ---- stage 1: one contiguous-stream matmul --------------------
         partial = (state["lead_sq"][None, :] - 2.0 * ql @ x_lead.T
                    + (ql ** 2).sum(1)[:, None])            # (c, n)
         partial = jnp.maximum(partial, 0.0)
-        est = _estimate(cfg, partial, D, state)
+        est = _estimate(cfg, partial, D, state, qe)
         if cfg.kind == "fdscan":
             exact = partial + (state["tail_sq"][None, :] - 2.0 * qt @ x_tail.T
                                + (qt ** 2).sum(1)[:, None])
@@ -143,27 +151,57 @@ def two_stage_topk(state: dict, q_lead: jax.Array, q_tail: jax.Array,
     c = min(cfg.query_chunk, nq)
     ql = q_lead.reshape(nq // c, c, -1)
     qt = q_tail.reshape(nq // c, c, -1)
-    d, i, s = jax.lax.map(one_chunk, (ql, qt))
+    qe = {key: v.reshape(nq // c, c) for key, v in q_extra.items()}
+    d, i, s = jax.lax.map(one_chunk, (ql, qt, qe))
     return (d.reshape(nq, k), i.reshape(nq, k), s.reshape(nq))
 
 
-def make_distributed_topk(mesh, cfg: DcoEngineConfig, shard_axes=("data", "model")):
+def two_stage_topk(state: dict, q_lead: jax.Array, q_tail: jax.Array,
+                   cfg: DcoEngineConfig, q_extra: dict | None = None):
+    """Top-k over the local shard for a batch of (already rotated) queries.
+
+    q_lead (Q, d1), q_tail (Q, D - d1).  Ragged batches (``nq`` not a
+    multiple of ``cfg.query_chunk``) are zero-padded to a whole number of
+    chunks and the padding rows sliced off the results.  ``q_extra`` carries
+    optional per-query scalars (DDCres tail norms / variance suffix).
+    Returns (dists_sq (Q,k), ids (Q,k), survivors (Q,) number of stage-2
+    rows actually alive).
+    """
+    q_extra = dict(q_extra or {})
+    nq = q_lead.shape[0]
+    if nq == 0:
+        raise ValueError("two_stage_topk needs at least one query")
+    c = min(cfg.query_chunk, nq)
+    pad = (-nq) % c
+    if pad:
+        q_lead = jnp.pad(q_lead, ((0, pad), (0, 0)))
+        q_tail = jnp.pad(q_tail, ((0, pad), (0, 0)))
+        q_extra = {key: jnp.pad(v, (0, pad)) for key, v in q_extra.items()}
+    d, i, s = _two_stage_topk_padded(state, q_lead, q_tail, q_extra, cfg)
+    return d[:nq], i[:nq], s[:nq]
+
+
+def make_distributed_topk(mesh, cfg: DcoEngineConfig, shard_axes=("data", "model"),
+                          extra_state: dict | None = None):
     """shard_map engine: dataset rows sharded over ``shard_axes``; queries
-    replicated; local two-stage top-k then all-gather + global merge."""
+    (and per-query ``q_extra`` scalars) replicated; local two-stage top-k
+    then all-gather + global merge.  ``extra_state`` carries the replicated
+    rule scalars from :func:`rule_scalars` (e.g. DADE mass_d1/eps_d1)."""
     from jax.sharding import PartitionSpec as P
     import jax.experimental.shard_map as shard_map
 
     n_shards = int(np.prod([mesh.shape[a] for a in shard_axes]))
+    extra_state = dict(extra_state or {})
 
-    def local_fn(x_lead, x_tail, lead_sq, tail_sq, q_lead, q_tail):
+    def local_fn(x_lead, x_tail, lead_sq, tail_sq, q_lead, q_tail, q_extra):
         state = {"x_lead": x_lead, "x_tail": x_tail,
-                 "lead_sq": lead_sq, "tail_sq": tail_sq}
-        d, i, _ = two_stage_topk(state, q_lead, q_tail, cfg)
+                 "lead_sq": lead_sq, "tail_sq": tail_sq, **extra_state}
+        d, i, _ = two_stage_topk(state, q_lead, q_tail, cfg, q_extra)
         # globalize ids with the shard's row offset
         idx = jax.lax.axis_index(shard_axes[0])
         if len(shard_axes) > 1:
             for a in shard_axes[1:]:
-                idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+                idx = idx * jax.lax.psum(1, a) + jax.lax.axis_index(a)
         i = i + idx * x_lead.shape[0]
         # all-gather per-shard top-k and merge
         dg = jax.lax.all_gather(d, shard_axes, tiled=False)   # (S, Q, k)
@@ -176,7 +214,7 @@ def make_distributed_topk(mesh, cfg: DcoEngineConfig, shard_axes=("data", "model
     spec_x = P(shard_axes)      # rows sharded over the product of axes
     return shard_map.shard_map(
         local_fn, mesh=mesh,
-        in_specs=(spec_x, spec_x, spec_x, spec_x, P(), P()),
+        in_specs=(spec_x, spec_x, spec_x, spec_x, P(), P(), P()),
         out_specs=(P(), P()),
         check_rep=False,
     )

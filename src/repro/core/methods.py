@@ -82,6 +82,22 @@ class DCOMethod:
         diff = X[ids] - q
         return np.einsum("nd,nd->n", diff, diff)
 
+    # -- device export --------------------------------------------------------
+    def device_state(self) -> dict:
+        """Uniform export consumed by the JAX engine (jax_engine).
+
+        Every method returns a dict with at least:
+          kind -- the engine decision rule (fdscan|lb|adsampling|dade|ddcres|ratio)
+          Xrot -- (N, r) row matrix the device streams (raw X when identity)
+          W    -- (D, r) query rotation, or None for identity
+          mean -- (D,) query centering, or None
+        plus rule-specific arrays (e.g. ``mass``/``eps_d`` for DADE).  The
+        default is exact lower-bound screening over the raw coordinates —
+        valid for any method, since partial ssd on original dims never prunes
+        a true neighbor.
+        """
+        return {"kind": "lb", "Xrot": self.state["X"], "W": None, "mean": None}
+
 
 # ---------------------------------------------------------------------------
 # Simple scanning
@@ -99,6 +115,9 @@ class FDScanning(DCOMethod):
 
     def screen(self, ids, ctx, qi, d, tau_sq):
         return np.ones(len(ids), bool), 0
+
+    def device_state(self):
+        return {"kind": "fdscan", "Xrot": self.state["X"], "W": None, "mean": None}
 
 
 class PDScanning(DCOMethod):
@@ -143,6 +162,10 @@ class PDScanningPlus(PDScanning):
         diff = self.state["Xrot"][ids, :d] - ctx["Qrot"][qi, :d]
         return np.einsum("nd,nd->n", diff, diff)
 
+    def device_state(self):
+        return {"kind": "lb", "Xrot": self.state["Xrot"],
+                "W": self.state["pca"]["W"], "mean": None}
+
 
 # ---------------------------------------------------------------------------
 # Hypothesis testing
@@ -178,6 +201,11 @@ class ADSampling(DCOMethod):
         D = self.state["D"]
         bound = tau_sq * (1.0 + eps0 / np.sqrt(d)) ** 2
         return partial * (D / d) <= bound, d
+
+    def device_state(self):
+        return {"kind": "adsampling", "Xrot": self.state["Xrot"],
+                "W": self.state["rot"]["P"], "mean": None,
+                "eps0": self.params.get("eps0", 2.1)}
 
 
 class DADE(DCOMethod):
@@ -220,6 +248,11 @@ class DADE(DCOMethod):
         est = partial / mass                       # unbiased under eigen-mass scaling
         eps = float(self.state["eps_d"][d - 1])
         return est <= tau_sq * (1.0 + eps) ** 2, d
+
+    def device_state(self):
+        return {"kind": "dade", "Xrot": self.state["Xrot"],
+                "W": self.state["pca"]["W"], "mean": None,
+                "mass": self.state["mass"], "eps_d": self.state["eps_d"]}
 
 
 class DDCres(DCOMethod):
@@ -275,6 +308,14 @@ class DDCres(DCOMethod):
         var = float(ctx["var_suffix"][qi, d])
         est = dis_p - 2.0 * m * np.sqrt(max(var, 0.0))      # Eq. 7 lower bound
         return est <= tau_sq, d
+
+    def device_state(self):
+        pca = self.state["pca"]
+        return {"kind": "ddcres", "Xrot": self.state["Xrot"],
+                "W": pca["W"], "mean": pca["mean"],
+                "sigma_sq": self.state["sigma_sq"],
+                "tail_var": self.state["tail_var"],
+                "m": self.params.get("m", 3.0)}
 
 
 # ---------------------------------------------------------------------------
@@ -344,6 +385,12 @@ class DDCpca(DCOMethod):
         partial = np.einsum("nd,nd->n", diff, diff)
         return partial <= theta * tau_sq, d
 
+    def device_state(self):
+        return {"kind": "ratio", "Xrot": self.state["Xrot"],
+                "W": self.state["pca"]["W"], "mean": None,
+                "models": dict(self.state["models"]),
+                "trained_k": self.state.get("trained_k")}
+
 
 class DDCopq(DCOMethod):
     """Yang et al. [3]: single per-k linear model on the PQ approximate
@@ -399,6 +446,12 @@ class DDCopq(DCOMethod):
         adist = T.pq_adist(self.state["pq"], ctx["luts"][qi], self.state["pq"]["codes"][ids])
         n_sub = self.state["pq"]["books"].shape[0]
         return adist <= theta * tau_sq, n_sub   # charge n_sub 'dims' for the LUT pass
+
+    def device_state(self):
+        # PQ LUT gathers don't map onto the dimension-blocked MXU stream
+        # (kernels/pq_lookup.py is the Pallas path for that); the device
+        # engine runs DDCopq with exact lower-bound screening on raw dims.
+        return {"kind": "lb", "Xrot": self.state["X"], "W": None, "mean": None}
 
 
 # ---------------------------------------------------------------------------

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.engine import ScanStats, make_schedule, scan_topk
+from repro.core.engine import QueryBatch, scan_topk
 
 
 def _kmeans_assign(X, cent, *, method=None, schedule=None, stats=None, block=8192):
@@ -26,11 +26,11 @@ def _kmeans_assign(X, cent, *, method=None, schedule=None, stats=None, block=819
             d2 = cn[None] - 2.0 * X[lo:hi] @ cent.T
             out[lo:hi] = d2.argmin(1)
         return out
-    ctx = method.prep_queries(X)               # queries here are the base rows
+    batch = QueryBatch.create(method, X, schedule, stats)  # base rows as queries
     ids = np.arange(cent.shape[0])
     for i in range(n):
         # small blocks so the running top-1 threshold starts pruning early
-        _, bi = scan_topk(method, ctx, i, ids, 1, schedule, stats=stats, block=32)
+        _, bi = scan_topk(method, batch, i, ids, 1, block=32)
         out[i] = bi[0]
     return out
 
@@ -69,7 +69,7 @@ class IVFIndex:
         self.n = n
         return self
 
-    def insert(self, X_old_n: int, new_ids: np.ndarray, Xnew: np.ndarray,
+    def insert(self, new_ids: np.ndarray, Xnew: np.ndarray,
                *, method=None, schedule=None):
         """Dynamic inserts (paper §V-E): assign new vectors to partitions;
         DCO screening accelerates the assignment."""
@@ -86,9 +86,6 @@ class IVFIndex:
         lists = [self.lists[j] for j in order]
         return np.concatenate(lists) if lists else np.empty(0, np.int64)
 
-    def search(self, method, ctx, qi: int, q: np.ndarray, k: int, nprobe: int,
-               schedule=None, stats: ScanStats | None = None):
-        cands = self.probe_ids(q, nprobe)
-        if schedule is None:
-            schedule = make_schedule(method.state["D"])
-        return scan_topk(method, ctx, qi, cands, k, schedule, stats=stats)
+    def search(self, method, batch: QueryBatch, qi: int, k: int, nprobe: int):
+        cands = self.probe_ids(batch.Q[qi], nprobe)
+        return scan_topk(method, batch, qi, cands, k)

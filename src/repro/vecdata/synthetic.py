@@ -14,6 +14,7 @@ distribution, mirroring the paper's §V-B setup.
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -112,7 +113,10 @@ def load_dataset(name: str, *, scale: float = 1.0, seed: int = 0) -> VectorDatas
     if key in _CACHE:
         return _CACHE[key]
     spec = DATASETS[name]
-    rng = np.random.default_rng(hash((name, seed)) % (2 ** 31))
+    # stable hash: builtin hash() is salted per process, which made every
+    # process draw a DIFFERENT corpus (flaky thresholds, unpaired benchmarks)
+    rng = np.random.default_rng(
+        (zlib.crc32(name.encode()) + 7919 * seed) % (2 ** 31))
     n = max(1000, int(spec["n"] * scale))
     nq, dim = spec["nq"], spec["dim"]
 

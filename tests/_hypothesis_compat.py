@@ -1,0 +1,31 @@
+"""Run property sweeps when hypothesis is installed; skip ONLY those tests
+(not their whole module) when it isn't — the container image ships without
+hypothesis, and the plain oracle tests in the same files must still run.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ImportError:
+    class _AnyStrategy:
+        def __getattr__(self, name):
+            def _strategy(*args, **kwargs):
+                return None
+            return _strategy
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # zero-arg stand-in: no fixture resolution for strategy params
+            def _skipped():
+                pytest.skip("hypothesis not installed")
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+        return deco

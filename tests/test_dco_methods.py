@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.core.engine import ScanStats, make_schedule, scan_topk
+from repro.core.engine import QueryBatch, ScanStats, make_schedule, scan_topk
 from repro.core.methods import ALL_METHODS, BASELINES, make_method
 from repro.vecdata.synthetic import recall_at_k
 
@@ -23,12 +23,12 @@ def test_full_scan_topk_recall(name, sift_small):
     ds = sift_small
     sched = make_schedule(ds.dim)
     m = _fit(name, ds, sched)
-    ctx = m.prep_queries(ds.Q[:NQ])
+    stats = ScanStats()
+    batch = QueryBatch.create(m, ds.Q[:NQ], sched, stats)
     gt, _ = ds.ground_truth(K)
     found = []
-    stats = ScanStats()
     for qi in range(NQ):
-        _, ids = scan_topk(m, ctx, qi, np.arange(ds.n), K, sched, stats=stats)
+        _, ids = scan_topk(m, batch, qi, np.arange(ds.n), K)
         found.append(ids)
     rec = recall_at_k(np.array(found), gt[:NQ])
     if m.exact:
@@ -45,8 +45,8 @@ def test_exact_methods_agree(sift_small):
     res = {}
     for name in BASELINES:
         m = _fit(name, ds, sched)
-        ctx = m.prep_queries(ds.Q[:4])
-        d, i = scan_topk(m, ctx, 0, np.arange(ds.n), K, sched)
+        batch = QueryBatch.create(m, ds.Q[:4], sched)
+        d, i = scan_topk(m, batch, 0, np.arange(ds.n), K)
         res[name] = (d, i)
     for name in BASELINES[1:]:
         np.testing.assert_allclose(res[name][0], res["FDScanning"][0], rtol=1e-4)
@@ -60,9 +60,10 @@ def test_append_consistency(sift_small):
     m = make_method("PDScanning+").fit(ds.X[:half])
     m.append(ds.X[half:])
     m2 = make_method("PDScanning+", pca=m.state["pca"]).fit(ds.X)
-    ctx, ctx2 = m.prep_queries(ds.Q[:2]), m2.prep_queries(ds.Q[:2])
-    d1, i1 = scan_topk(m, ctx, 0, np.arange(ds.n), K, sched)
-    d2, i2 = scan_topk(m2, ctx2, 0, np.arange(ds.n), K, sched)
+    b1 = QueryBatch.create(m, ds.Q[:2], sched)
+    b2 = QueryBatch.create(m2, ds.Q[:2], sched)
+    d1, i1 = scan_topk(m, b1, 0, np.arange(ds.n), K)
+    d2, i2 = scan_topk(m2, b2, 0, np.arange(ds.n), K)
     np.testing.assert_allclose(d1, d2, rtol=1e-4)
     assert set(i1) == set(i2)
 

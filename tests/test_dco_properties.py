@@ -1,9 +1,10 @@
 """Property-based tests (hypothesis) for core DCO invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import transforms as T
-from repro.core.engine import make_schedule, scan_topk, topk_merge
+from repro.core.engine import QueryBatch, make_schedule, scan_topk, topk_merge
 from repro.core.methods import make_method
 
 dims = st.integers(min_value=4, max_value=96)
@@ -54,8 +55,8 @@ def test_exact_scan_topk_equals_bruteforce(n, d, k, seed):
     q = rng.standard_normal((1, d)).astype(np.float32)
     k = min(k, n)
     m = make_method("PDScanning+").fit(X)
-    ctx = m.prep_queries(q)
-    bd, bi = scan_topk(m, ctx, 0, np.arange(n), k, make_schedule(d), block=32)
+    batch = QueryBatch.create(m, q, make_schedule(d))
+    bd, bi = scan_topk(m, batch, 0, np.arange(n), k, block=32)
     brute = ((X - q[0]) ** 2).sum(1)
     expect = np.sort(brute)[:k]
     np.testing.assert_allclose(np.asarray(bd), expect, rtol=1e-3, atol=1e-4)

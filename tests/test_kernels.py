@@ -3,7 +3,7 @@ oracles (interpret mode on CPU; same code targets TPU)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.ops import dco_scan_op, pq_lookup_op

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.engine import ScanStats, make_schedule
+from repro.core.engine import QueryBatch, ScanStats, make_schedule
 from repro.core.methods import make_method
 from repro.search.hnsw import HNSWIndex
 from repro.search.ivf import IVFIndex
@@ -20,11 +20,11 @@ def test_ivf_recall_vs_nprobe(sift_small):
     ds = sift_small
     idx = IVFIndex(n_list=64).build(ds.X)
     m = make_method("FDScanning").fit(ds.X)
-    ctx = m.prep_queries(ds.Q[:16])
+    batch = QueryBatch.create(m, ds.Q[:16])
     gt, _ = ds.ground_truth(K)
     recs = []
     for nprobe in (2, 16, 64):
-        found = [idx.search(m, ctx, qi, ds.Q[qi], K, nprobe)[1]
+        found = [idx.search(m, batch, qi, K, nprobe)[1]
                  for qi in range(16)]
         recs.append(recall_at_k(np.array(found), gt[:16]))
     assert recs[-1] == 1.0                     # all partitions == brute force
@@ -37,9 +37,9 @@ def test_ivf_dco_methods_agree_at_full_probe(sift_small):
     gt, _ = ds.ground_truth(K)
     for name in ("PDScanning+", "ADSampling", "DDCres"):
         m = make_method(name).fit(ds.X)
-        ctx = m.prep_queries(ds.Q[:8])
         stats = ScanStats()
-        found = [idx.search(m, ctx, qi, ds.Q[qi], K, 32, stats=stats)[1]
+        batch = QueryBatch.create(m, ds.Q[:8], stats=stats)
+        found = [idx.search(m, batch, qi, K, 32)[1]
                  for qi in range(8)]
         rec = recall_at_k(np.array(found), gt[:8])
         assert rec >= 0.95, (name, rec)
@@ -52,11 +52,11 @@ def test_ivf_insert(sift_small):
     idx = IVFIndex(n_list=32).build(ds.X[:half])
     m = make_method("PDScanning").fit(ds.X)
     cent_m = make_method("PDScanning").fit(idx.centroids)
-    idx.insert(half, np.arange(half, ds.n), ds.X[half:], method=cent_m)
+    idx.insert(np.arange(half, ds.n), ds.X[half:], method=cent_m)
     assert idx.n == ds.n
-    ctx = m.prep_queries(ds.Q[:8])
+    batch = QueryBatch.create(m, ds.Q[:8])
     gt, _ = ds.ground_truth(K)
-    found = [idx.search(m, ctx, qi, ds.Q[qi], K, 32)[1] for qi in range(8)]
+    found = [idx.search(m, batch, qi, K, 32)[1] for qi in range(8)]
     assert recall_at_k(np.array(found), gt[:8]) == 1.0
 
 
@@ -68,9 +68,9 @@ def test_hnsw_build_and_search():
     m = make_method("PDScanning+").fit(ds.X)
     idx = HNSWIndex(m=8, ef_construction=40).build(ds.X, method=m,
                                                    schedule=sched)
-    ctx = m.prep_queries(ds.Q[:10])
+    batch = QueryBatch.create(m, ds.Q[:10], sched)
     gt, _ = ds.ground_truth(K)
-    found = [idx.search(m, ctx, qi, K, ef=90, schedule=sched)[1]
+    found = [idx.search(m, batch, qi, K, 90)[1]
              for qi in range(10)]
     rec = recall_at_k(np.array(found), gt[:10])
     assert rec >= 0.75, rec
@@ -99,8 +99,18 @@ xr = np.asarray(m.state["Xrot"], np.float32)
 sh = NamedSharding(mesh, P(("data","model")))
 a = [jax.device_put(v, sh) for v in (xr[:, :cfg.d1], xr[:, cfg.d1:], (xr[:, :cfg.d1]**2).sum(1), (xr[:, cfg.d1:]**2).sum(1))]
 fn = make_distributed_topk(mesh, cfg)
-dd, ii = fn(*a, Q[:, :cfg.d1], Q[:, cfg.d1:])
+dd, ii = fn(*a, Q[:, :cfg.d1], Q[:, cfg.d1:], {})
 assert float(np.abs(np.sort(np.array(dd),1) - np.sort(np.array(d0),1)).max()) < 1e-3
+# facade mesh path must serve rules with per-query extras / rule scalars
+from repro.api import open_index, SchedulePolicy
+from repro.vecdata.synthetic import recall_at_k
+gt, _ = ds.ground_truth(10)
+pol = SchedulePolicy(d1=48, capacity=512, query_chunk=8)
+for name in ("DDCres", "DADE"):
+    sess = open_index(ds.X, index="flat", method=name, backend="jax",
+                      schedule=pol, mesh=mesh)
+    res = sess.search(ds.Q[:13], 10)          # ragged through the mesh
+    assert recall_at_k(res.ids, gt[:13]) >= 0.95, name
 print("DIST_OK")
 '''
     env = dict(os.environ, PYTHONPATH="src")

@@ -12,7 +12,8 @@ import jax
 import numpy as np
 import pytest
 
-from repro.core.engine import ScanStats, make_schedule
+from repro.api import SearchSession
+from repro.core.engine import QueryBatch, ScanStats, make_schedule
 from repro.core.methods import make_method
 from repro.search.ivf import IVFIndex
 from repro.vecdata import load_dataset
@@ -25,15 +26,11 @@ def test_retrieval_end_to_end(sift_small):
     ds = sift_small
     idx = IVFIndex(n_list=32).build(ds.X)
     gt, _ = ds.ground_truth(K)
-    sched = make_schedule(ds.dim)
     results = {}
     for name in ("FDScanning", "DDCres"):
         m = make_method(name).fit(ds.X)
-        ctx = m.prep_queries(ds.Q[:10])
-        stats = ScanStats()
-        found = [idx.search(m, ctx, qi, ds.Q[qi], K, 16, sched, stats)[1]
-                 for qi in range(10)]
-        results[name] = (recall_at_k(np.array(found), gt[:10]), stats)
+        res = SearchSession(m, "ivf", idx).search(ds.Q[:10], K, nprobe=16)
+        results[name] = (recall_at_k(res.ids, gt[:10]), res.stats)
     rec_fd, st_fd = results["FDScanning"]
     rec_res, st_res = results["DDCres"]
     assert abs(rec_fd - rec_res) < 0.05          # recall preserved (paper)
@@ -47,12 +44,11 @@ def test_dimensionality_sensitivity_direction():
     ratios = {}
     for ds in (lo, hi):
         m = make_method("DDCres").fit(ds.X)
-        ctx = m.prep_queries(ds.Q[:6])
         stats = ScanStats()
+        batch = QueryBatch.create(m, ds.Q[:6], make_schedule(ds.dim), stats)
         from repro.core.engine import scan_topk
         for qi in range(6):
-            scan_topk(m, ctx, qi, np.arange(ds.n), K,
-                      make_schedule(ds.dim), stats=stats)
+            scan_topk(m, batch, qi, np.arange(ds.n), K)
         ratios[ds.name] = stats.pruning_ratio
     assert ratios["gist"] > ratios["deep"], ratios
 
