@@ -1,0 +1,98 @@
+"""Streaming vs two-stage device engine: controlled N x D x d1 sweep.
+
+Same fitted method, same queries, same facade entrypoint — the only variable
+is ``SchedulePolicy.engine``.  Records QPS, recall, real survivor counts,
+dimension pruning, and the peak estimate-tile footprint (the two-stage
+engine materializes a (query_chunk, N) estimate matrix; the streaming engine
+holds (query_chunk, row_block) + (query_chunk, block_capacity), independent
+of N).  Writes BENCH_kernel.json at the repo root when run as a script.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import dataset, emit, fmt3, method_for
+from repro.api import SchedulePolicy, SearchSession
+from repro.vecdata.synthetic import recall_at_k
+
+# (dataset, d1) cells: low-D, moderate-D, high-D, ultra-high-D corpora
+SWEEP = (
+    ("glove", 48), ("sift", 48), ("sift", 96),
+    ("wikipedia", 128), ("openai", 128),
+)
+METHODS = ("PDScanning+", "DADE")
+K, NQ, REPEATS = 10, 32, 5
+
+
+def _policy(engine: str, d1: int) -> SchedulePolicy:
+    return SchedulePolicy(d1=d1, query_chunk=32, capacity=2048, engine=engine)
+
+
+def _run_cell(ds, name: str, d1: int, engine: str) -> dict:
+    m = method_for(ds, name, k=K)
+    sess = SearchSession(m, "flat", None, "jax", _policy(engine, d1))
+    Q = ds.Q[:NQ]
+    sess.search(Q, K)                       # compile + materialize
+    best, res = np.inf, None
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        r = sess.search(Q, K)
+        dt = time.perf_counter() - t0
+        if dt < best:
+            best, res = dt, r
+    gt, _ = ds.ground_truth(K)
+    chunk = sess.policy.query_chunk
+    est_bytes = (4 * chunk * ds.n if engine == "two_stage"
+                 else 4 * chunk * (min(sess.policy.row_block, ds.n)
+                                   + sess.policy.block_capacity))
+    return {
+        "dataset": ds.name, "n": ds.n, "dim": ds.dim, "d1": d1,
+        "method": name, "engine": engine,
+        "qps": NQ / best, "recall": recall_at_k(res.ids, gt[:NQ]),
+        "pruning_ratio": res.stats.pruning_ratio,
+        "survivors_mean": res.stats.extra.get("survivors_mean"),
+        "uncertified_queries": res.stats.extra.get("uncertified_queries"),
+        "estimate_tile_bytes": est_bytes,
+    }
+
+
+def main(json_path: str | None = None) -> dict:
+    rows, ratios = [], []
+    for ds_name, d1 in SWEEP:
+        ds = dataset(ds_name)
+        for name in METHODS:
+            cell = {}
+            for engine in ("two_stage", "stream"):
+                cell[engine] = _run_cell(ds, name, d1, engine)
+                rows.append(cell[engine])
+            ratio = cell["stream"]["qps"] / cell["two_stage"]["qps"]
+            ratios.append(ratio)
+            emit(f"stream/{ds_name}/d1={d1}/{name}",
+                 1e6 / cell["stream"]["qps"],
+                 qps_stream=f"{cell['stream']['qps']:.1f}",
+                 qps_two_stage=f"{cell['two_stage']['qps']:.1f}",
+                 qps_ratio=fmt3(ratio),
+                 recall_stream=fmt3(cell["stream"]["recall"]),
+                 recall_two_stage=fmt3(cell["two_stage"]["recall"]),
+                 est_bytes_stream=cell["stream"]["estimate_tile_bytes"],
+                 est_bytes_two_stage=cell["two_stage"]["estimate_tile_bytes"])
+    out = {
+        "benchmark": "stream-vs-two-stage device engine (CPU jnp block path; "
+                     "controlled: same method state, queries, facade)",
+        "k": K, "nq": NQ, "repeats": REPEATS,
+        "geomean_qps_ratio": float(np.exp(np.mean(np.log(ratios)))),
+        "rows": rows,
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    result = main("BENCH_kernel.json")
+    print(f"# geomean qps ratio (stream / two_stage): "
+          f"{result['geomean_qps_ratio']:.3f}")

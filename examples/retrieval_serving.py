@@ -3,9 +3,9 @@ through the facade.
 
 Opens one session with ``backend="jax"`` and a host mesh: the corpus is
 sharded over the mesh, queries are batch-rotated once, and each search runs
-the certified two-stage engine per shard with a global top-k merge — the
-production serving path the dry-run lowers against 256/512 chips, here on
-8 host devices.
+the certified streaming engine (running-tau block scan, DESIGN.md §4) per
+shard with a global top-k merge — the production serving path the dry-run
+lowers against 256/512 chips, here on 8 host devices.
 
   PYTHONPATH=src python examples/retrieval_serving.py
 """
@@ -42,7 +42,7 @@ def main():
     rec = recall_at_k(np.asarray(res.ids), gt[:32])
     print(f"mesh={dict(mesh.shape)}  corpus={ds.n}x{ds.dim}")
     print(f"batch=32 queries in {dt*1e3:.1f} ms  ({32/dt:.0f} QPS)  "
-          f"recall@10={rec:.3f} (certified two-stage, d1=48)")
+          f"recall@10={rec:.3f} (certified streaming scan, d1=48)")
 
 
 if __name__ == "__main__":

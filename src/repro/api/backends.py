@@ -2,11 +2,14 @@
 
 ``HostBackend`` runs the staged numpy scan (core.engine.scan_topk) over a
 flat corpus, an IVF partition probe, or an HNSW graph walk.  ``JaxBackend``
-runs the batched two-stage device engine (core.jax_engine) over a flat
-corpus — single device or, when a mesh is supplied, sharded with a global
-top-k merge.  Both consume the SAME fitted method state: the host path via
-``method.screen``/``exact_sq``, the device path via the method's uniform
-``device_state()`` export.
+runs the device engines over a flat corpus — the streaming block-fused scan
+(core.stream_engine, default) or the legacy two-stage engine
+(core.jax_engine) — single device or, when a mesh is supplied, sharded with
+a global top-k merge.  A flat corpus can also be probed IVF-style on device:
+rows are laid out partition-major and the streaming engine masks/skips
+unprobed partitions.  Both backends consume the SAME fitted method state:
+the host path via ``method.screen``/``exact_sq``, the device path via the
+method's uniform ``device_state()`` export.
 """
 from __future__ import annotations
 
@@ -52,38 +55,55 @@ class HostBackend:
 
 
 class JaxBackend:
-    """Two-stage device engine over a flat corpus (optionally mesh-sharded).
+    """Device engines over a flat or IVF-probed corpus (flat optionally
+    mesh-sharded).
 
     Lazily materializes the dimension-blocked device arrays from
     ``method.device_state()`` and rebuilds them after ``invalidate()`` (the
     session calls it on ``add``).  Query padding to the chunk size is handled
-    inside ``two_stage_topk``, so ragged batches are fine.
+    inside the engines, so ragged batches are fine.
     """
 
     name = "jax"
 
     def __init__(self, method, index_kind: str, index, policy, *, mesh=None):
-        if index_kind != "flat":
+        if index_kind not in ("flat", "ivf"):
             raise ValueError(
-                f"backend='jax' serves index='flat' (got {index_kind!r}); "
-                "IVF probes and HNSW graph walks are host-side indexes")
+                f"backend='jax' serves index='flat' or 'ivf' (got "
+                f"{index_kind!r}); HNSW graph walks are host-side indexes")
+        if index_kind == "ivf" and mesh is not None:
+            raise ValueError(
+                "device IVF probing is single-device; mesh-shard a flat "
+                "corpus instead")
         self.method = method
+        self.index_kind = index_kind
+        self.index = index
         self.policy = policy
         self.mesh = mesh
         self._dstate = None         # host-side device_state() export
         self._state = None          # jnp arrays (single-device path)
+        self._blocks = None         # cached stream-engine corpus layout
         self._shard_args = None     # device_put shards (mesh path)
         self._mesh_fns: dict = {}   # cfg -> shard_map fn
+        self._list_sizes = None     # IVF partition sizes (probe stats)
 
     # -- state management ---------------------------------------------------
     def invalidate(self):
-        self._dstate = self._state = self._shard_args = None
+        self._dstate = self._state = self._blocks = self._shard_args = None
+        self._list_sizes = None
         self._mesh_fns.clear()
 
     def _materialize(self):
+        import jax.numpy as jnp
         from repro.core.jax_engine import build_device_state, rule_scalars
 
         dstate = self.method.device_state()
+        if self.mesh is not None and dstate["kind"] == "opq":
+            # PQ screening is single-device for now; mesh shards fall back to
+            # the exact lower-bound rule of the base export (same fallback
+            # untrained DDCopq uses)
+            from repro.core.methods import DCOMethod
+            dstate = DCOMethod.device_state(self.method)
         xr = np.asarray(dstate["Xrot"], np.float32)
         D = self.method.state["D"]
         if xr.shape[1] != D:
@@ -91,10 +111,29 @@ class JaxBackend:
                 f"{self.method.name}: rotation rank {xr.shape[1]} < D={D}; "
                 "the device engine needs a full-rank rotation for exact "
                 "stage-2 completion — use backend='host' at this D")
+        extra = {}
+        if self.index_kind == "ivf":
+            # partition-major layout: the streaming engine probes by masking
+            # row blocks whose partition span was not selected
+            part = np.empty(self.method.state["N"], np.int64)
+            for j, lst in enumerate(self.index.lists):
+                part[lst] = j
+            perm = np.argsort(part, kind="stable")
+            xr = xr[perm]
+            dstate = dict(dstate, Xrot=xr)
+            extra["row_ids"] = jnp.asarray(perm, jnp.int32)
+            extra["row_part"] = jnp.asarray(part[perm], jnp.int32)
+            self._list_sizes = np.array([len(lst) for lst in self.index.lists])
+        if dstate["kind"] == "opq":
+            codes = np.asarray(dstate["codes"])
+            if self.index_kind == "ivf":
+                codes = codes[perm]
+            extra["codes"] = jnp.asarray(codes, jnp.int32)
         self._dstate = dstate
         self._d1 = min(self.policy.d1, D)
         if self.mesh is None:
             self._state = build_device_state(dstate, self._d1)
+            self._state.update(extra)
         else:
             import jax
             from jax.sharding import NamedSharding, PartitionSpec as P
@@ -112,13 +151,17 @@ class JaxBackend:
 
         ds, p = self._dstate, self.policy
         kw = dict(kind=ds["kind"], d1=self._d1, k=k, capacity=p.capacity,
-                  query_chunk=p.query_chunk, tau_slack=p.tau_slack)
+                  query_chunk=p.query_chunk, tau_slack=p.tau_slack,
+                  row_block=p.row_block, block_capacity=p.block_capacity,
+                  use_kernel=p.use_kernel)
         if ds["kind"] == "adsampling":
             kw["eps0"] = float(ds.get("eps0", 2.1))
         elif ds["kind"] == "ddcres":
             kw["m"] = float(ds.get("m", 3.0))
         elif ds["kind"] == "ratio":
             kw["theta"] = self._ratio_theta(k)
+        elif ds["kind"] == "opq":
+            kw["theta"] = float(ds["theta"])
         return DcoEngineConfig(**kw)
 
     def _ratio_theta(self, k: int) -> float:
@@ -130,8 +173,9 @@ class JaxBackend:
         return max(trained)[1] if trained else 1.0
 
     def _prep_queries(self, Q):
-        """Rotate/center queries into the device basis + DDCres per-query
-        scalars (tail query energy and Eq. 6 variance suffix at d1)."""
+        """Rotate/center queries into the device basis + per-query extras:
+        DDCres scalars (tail query energy and Eq. 6 variance suffix at d1)
+        or the DDCopq PQ lookup tables."""
         ds, d1 = self._dstate, self._d1
         Q = np.atleast_2d(np.asarray(Q, np.float32))
         Qp = Q - ds["mean"] if ds.get("mean") is not None else Q
@@ -144,46 +188,110 @@ class JaxBackend:
                 "qtail_sq": (Qr[:, d1:] ** 2).sum(1) + qres,
                 "var_d1": var + qres * float(ds["tail_var"]),
             }
+        elif ds["kind"] == "opq":
+            from repro.core import transforms as T
+            pq = {"books": ds["books"], "splits": ds["splits"]}
+            q_extra = {"lut": np.stack([T.pq_query_lut(pq, q) for q in Qr])}
         return Qr[:, :d1], Qr[:, d1:], q_extra
+
+    def _probe(self, Q, nprobe: int):
+        """Rank partitions by centroid distance (same rule as the host
+        IVFIndex.probe_ids) -> (nq, nprobe) partition ids + candidate counts."""
+        cent = self.index.centroids
+        npb = min(nprobe, cent.shape[0])
+        Q = np.atleast_2d(np.asarray(Q, np.float32))
+        d2 = (cent ** 2).sum(1)[None, :] - 2.0 * Q @ cent.T   # +||q||^2 const
+        probed = np.argpartition(d2, npb - 1, axis=1)[:, :npb]
+        return probed.astype(np.int32), self._list_sizes[probed].sum(1)
 
     # -- search --------------------------------------------------------------
     def search(self, Q, k: int, *, nprobe: int, ef: int):
         import jax
         import jax.numpy as jnp
         from repro.core.jax_engine import make_distributed_topk, two_stage_topk
+        from repro.core.stream_engine import stream_topk
 
         if self._dstate is None:
             self._materialize()
         cfg = self._config(k)
         ql, qt, qe = self._prep_queries(Q)
         nq, N, D = ql.shape[0], self.method.state["N"], self.method.state["D"]
-        stats = ScanStats(n_dco=nq * N, dims_total=float(nq) * N * D)
+        engine = self.policy.engine
+        if cfg.kind == "opq" or self.index_kind == "ivf":
+            engine = "stream"       # only the streaming engine serves these
+        qe = {key: jnp.asarray(v) for key, v in qe.items()}
+        cand_per_q = np.full(nq, N, np.float64)
+        passed = dmin = None
+        n_anchor = 0                # two_stage completes k anchors per query
         if self.mesh is None:
-            d, i, surv = two_stage_topk(
-                self._state, jnp.asarray(ql), jnp.asarray(qt), cfg,
-                {key: jnp.asarray(v) for key, v in qe.items()})
+            if engine == "two_stage":
+                d, i, surv = two_stage_topk(
+                    self._state, jnp.asarray(ql), jnp.asarray(qt), cfg, qe)
+                n_anchor = nq * k
+            else:
+                from repro.core.stream_engine import build_stream_blocks
+                if self._blocks is None:
+                    # pad+reshape of the whole corpus happens once per
+                    # materialization, not per query batch
+                    self._blocks = build_stream_blocks(self._state,
+                                                       self.policy.row_block)
+                probe = None
+                if self.index_kind == "ivf":
+                    probed, cand_per_q = self._probe(Q, nprobe)
+                    probe = jnp.asarray(probed)
+                d, i, surv, passed, dmin = stream_topk(
+                    self._state, jnp.asarray(ql), jnp.asarray(qt), cfg, qe,
+                    probe, blocks=self._blocks)
             surv = np.asarray(surv)
         else:
             if cfg not in self._mesh_fns:
                 self._mesh_fns[cfg] = jax.jit(
                     make_distributed_topk(self.mesh, cfg,
                                           tuple(self.mesh.axis_names),
-                                          extra_state=self._mesh_extra_state))
-            d, i = self._mesh_fns[cfg](*self._shard_args,
-                                       jnp.asarray(ql), jnp.asarray(qt),
-                                       {key: jnp.asarray(v)
-                                        for key, v in qe.items()})
-            surv = np.full(nq, min(cfg.capacity, N))    # per-shard upper bound
+                                          extra_state=self._mesh_extra_state,
+                                          engine=engine))
+            d, i, surv, dmin = self._mesh_fns[cfg](*self._shard_args,
+                                                   jnp.asarray(ql),
+                                                   jnp.asarray(qt), qe)
+            surv = np.asarray(surv)     # real completions, psum'd over shards
+            if engine == "two_stage":
+                n_anchor = nq * k * int(np.prod(tuple(self.mesh.shape.values())))
         jax.block_until_ready(d)
+        stats = ScanStats(n_dco=int(cand_per_q.sum()),
+                          dims_total=float((cand_per_q * D).sum()))
         if cfg.kind == "fdscan":
             stats.dims_scanned = stats.dims_total
-        else:
-            # stage 1 streams d1 dims for every row; stage 2 + the k anchor
-            # completions stream the tail for survivors only
-            stats.dims_scanned = (float(nq) * N * self._d1
-                                  + float(surv.sum() + nq * k) * (D - self._d1))
+        elif cfg.kind == "opq":
+            # PQ screening charges n_sub 'dims' per candidate (as the host
+            # rule does); survivors complete the full D original dims
+            n_sub = int(self._dstate["books"].shape[0])
+            stats.dims_scanned = (float((cand_per_q * n_sub).sum())
+                                  + float(surv.sum()) * D)
             stats.extra["survivors_mean"] = float(surv.mean())
+            stats.extra["screen_pass_mean"] = float(np.asarray(passed).mean())
+            self._certify(stats, d, dmin)
+        else:
+            # stage 1 streams d1 dims for every candidate row; stage 2 (plus
+            # the two-stage engine's k anchor completions) streams the tail
+            # for the ACTUAL survivors
+            stats.dims_scanned = (float((cand_per_q * self._d1).sum())
+                                  + float(surv.sum() + n_anchor) * (D - self._d1))
+            stats.extra["survivors_mean"] = float(surv.mean())
+            if passed is not None:
+                stats.extra["screen_pass_mean"] = float(np.asarray(passed).mean())
+            self._certify(stats, d, dmin)
         return (np.asarray(d, np.float32), np.asarray(i, np.int64), stats)
+
+    @staticmethod
+    def _certify(stats, d, dmin):
+        """Streaming-engine exactness certificate: a query is certified iff
+        every estimate the per-block completion budget dropped exceeds its
+        returned k-th distance (so no true neighbor can have been truncated;
+        DESIGN.md §4).  For estimator rules the stat is advisory."""
+        if dmin is None:
+            return
+        fail = np.asarray(dmin) <= np.asarray(d)[:, -1]
+        stats.extra["uncertified_queries"] = float(fail.mean())
 
 
 def make_backend(name: str, method, index_kind: str, index, policy, *, mesh=None):

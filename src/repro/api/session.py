@@ -110,11 +110,15 @@ def open_index(X, *, index: str = "flat", method: str = "DADE",
     policy = schedule if schedule is not None else SchedulePolicy()
     if method not in ALL_METHODS:
         raise ValueError(f"method must be one of {METHODS}, got {method!r}")
-    if backend == "jax" and index != "flat":
-        # fail before paying for an index the backend can't serve
+    # fail before paying for an index the backend can't serve
+    if backend == "jax" and index == "hnsw":
         raise ValueError(
-            f"backend='jax' serves index='flat' (got {index!r}); "
-            "IVF probes and HNSW graph walks are host-side indexes")
+            f"backend='jax' serves index='flat' or 'ivf' (got {index!r}); "
+            "HNSW graph walks are host-side indexes")
+    if backend == "jax" and index == "ivf" and mesh is not None:
+        raise ValueError(
+            "device IVF probing is single-device; mesh-shard a flat corpus "
+            "instead")
     m = make_method(method, **{"seed": seed, **(method_params or {})})
     m.fit(X)
     if m.needs_training:

@@ -13,10 +13,17 @@ class SchedulePolicy:
     """How a session stages its DCO screening, on both backends.
 
     Host (staged numpy scan): ``delta0``/``delta_d``/``max_stages`` set the
-    paper's (Delta_0, Delta_d) stage dims.  Device (two-stage JAX engine):
-    ``d1`` is the stage-1 lead width, ``capacity`` the per-query stage-2
-    survivor budget, ``query_chunk`` the lax.map batch granularity, and
-    ``tau_slack`` the extra slack on the certified threshold.
+    paper's (Delta_0, Delta_d) stage dims.  Device: ``d1`` is the stage-1
+    lead width, ``query_chunk`` the lax.map batch granularity, ``tau_slack``
+    the extra slack on the certified threshold.  ``engine`` picks the device
+    engine — ``"stream"`` (default; block-fused scan with a running top-k,
+    core.stream_engine) or ``"two_stage"`` (legacy one-shot engine that
+    materializes the (query_chunk, N) estimate matrix; ``capacity`` is its
+    survivor budget).  Streaming knobs: ``row_block`` corpus rows per scan
+    step (bigger = fewer merges, more VMEM/HBM per tile), ``block_capacity``
+    survivors tail-completed per block per query (must comfortably exceed k;
+    the per-block analogue of ``capacity``), ``use_kernel`` routes stage 1
+    through the Pallas kernels (None = only on TPU).  See DESIGN.md §4.
     """
 
     delta0: int = 32
@@ -26,6 +33,10 @@ class SchedulePolicy:
     capacity: int = 2048
     query_chunk: int = 16
     tau_slack: float = 1.0
+    engine: str = "stream"
+    row_block: int = 4096
+    block_capacity: int = 128
+    use_kernel: bool | None = None
 
     def stage_dims(self, D: int) -> list:
         return make_schedule(D, delta0=self.delta0, delta_d=self.delta_d,

@@ -1,5 +1,12 @@
 """Device (TPU) DCO engine: batched two-stage pruned top-k in pure JAX.
 
+NOTE: since PR 2 the default device path is the streaming block-fused scan
+in ``core.stream_engine`` (running tau, O(chunk·row_block) estimate memory);
+this module keeps the engine config, the device-state builders, the
+distributed wrapper, and the legacy one-shot engine
+(``SchedulePolicy(engine="two_stage")``), which materializes a full
+(query_chunk, N) estimate matrix per chunk.
+
 This is the hardware adaptation of the paper's per-vector early-exit loop
 (DESIGN.md §3).  Per query block:
 
@@ -42,6 +49,12 @@ class DcoEngineConfig:
     theta: float = 1.0         # ratio (DDCpca learned threshold)
     tau_slack: float = 1.0     # extra slack on the certified tau
     query_chunk: int = 16      # queries processed per lax.map step
+    # --- streaming engine (core.stream_engine) knobs; ignored by two_stage ---
+    row_block: int = 4096      # candidate rows streamed per lax.scan step
+    block_capacity: int = 128  # survivors tail-completed per block per query
+    use_kernel: bool | None = None  # Pallas dco_scan/pq_lookup for stage 1
+                                    # (None -> only on TPU; CPU uses the
+                                    # numerically identical jnp block path)
 
 
 def build_device_state(method_or_arrays, d1: int) -> dict:
@@ -182,21 +195,38 @@ def two_stage_topk(state: dict, q_lead: jax.Array, q_tail: jax.Array,
 
 
 def make_distributed_topk(mesh, cfg: DcoEngineConfig, shard_axes=("data", "model"),
-                          extra_state: dict | None = None):
+                          extra_state: dict | None = None, engine: str = "stream"):
     """shard_map engine: dataset rows sharded over ``shard_axes``; queries
-    (and per-query ``q_extra`` scalars) replicated; local two-stage top-k
-    then all-gather + global merge.  ``extra_state`` carries the replicated
-    rule scalars from :func:`rule_scalars` (e.g. DADE mass_d1/eps_d1)."""
+    (and per-query ``q_extra`` scalars) replicated; local top-k per shard
+    then all-gather + global merge.  The local engine is the streaming
+    block-fused scan (core.stream_engine, the default) or the legacy
+    ``two_stage`` materializing engine.  ``extra_state`` carries the
+    replicated rule scalars from :func:`rule_scalars` (e.g. DADE
+    mass_d1/eps_d1).  Returns (dists (Q, k), ids (Q, k), survivors (Q,),
+    dropped_min_est (Q,)) — survivors is the REAL number of stage-2
+    completions summed over all shards (psum), not a capacity bound;
+    dropped_min_est is the global (pmin) exactness certificate of the
+    streaming engine, +inf for the two-stage engine.  NOTE the per-shard
+    streaming layout is rebuilt inside the compiled call (a pad copy when
+    the shard size is not a row_block multiple) — size shards divisibly
+    when that matters."""
     from jax.sharding import PartitionSpec as P
     import jax.experimental.shard_map as shard_map
 
-    n_shards = int(np.prod([mesh.shape[a] for a in shard_axes]))
+    if engine not in ("stream", "two_stage"):
+        raise ValueError(f"engine must be 'stream' or 'two_stage', got {engine!r}")
     extra_state = dict(extra_state or {})
 
     def local_fn(x_lead, x_tail, lead_sq, tail_sq, q_lead, q_tail, q_extra):
         state = {"x_lead": x_lead, "x_tail": x_tail,
                  "lead_sq": lead_sq, "tail_sq": tail_sq, **extra_state}
-        d, i, _ = two_stage_topk(state, q_lead, q_tail, cfg, q_extra)
+        if engine == "stream":
+            from repro.core.stream_engine import stream_topk
+            d, i, surv, _, dmin = stream_topk(state, q_lead, q_tail, cfg,
+                                              q_extra)
+        else:
+            d, i, surv = two_stage_topk(state, q_lead, q_tail, cfg, q_extra)
+            dmin = jnp.full(d.shape[0], jnp.inf)
         # globalize ids with the shard's row offset
         idx = jax.lax.axis_index(shard_axes[0])
         if len(shard_axes) > 1:
@@ -209,12 +239,14 @@ def make_distributed_topk(mesh, cfg: DcoEngineConfig, shard_axes=("data", "model
         dg = jnp.moveaxis(dg, 0, 1).reshape(d.shape[0], -1)   # (Q, S*k)
         ig = jnp.moveaxis(ig, 0, 1).reshape(d.shape[0], -1)
         best, pos = jax.lax.top_k(-dg, cfg.k)
-        return -best, jnp.take_along_axis(ig, pos, axis=1)
+        surv = jax.lax.psum(surv, shard_axes)   # real completions, all shards
+        dmin = jax.lax.pmin(dmin, shard_axes)   # weakest shard certificate
+        return -best, jnp.take_along_axis(ig, pos, axis=1), surv, dmin
 
     spec_x = P(shard_axes)      # rows sharded over the product of axes
     return shard_map.shard_map(
         local_fn, mesh=mesh,
         in_specs=(spec_x, spec_x, spec_x, spec_x, P(), P(), P()),
-        out_specs=(P(), P()),
+        out_specs=(P(), P(), P(), P()),
         check_rep=False,
     )

@@ -448,10 +448,19 @@ class DDCopq(DCOMethod):
         return adist <= theta * tau_sq, n_sub   # charge n_sub 'dims' for the LUT pass
 
     def device_state(self):
-        # PQ LUT gathers don't map onto the dimension-blocked MXU stream
-        # (kernels/pq_lookup.py is the Pallas path for that); the device
-        # engine runs DDCopq with exact lower-bound screening on raw dims.
-        return {"kind": "lb", "Xrot": self.state["X"], "W": None, "mean": None}
+        theta = self.state["models"].get(self.state.get("trained_k"))
+        if theta is None:
+            # untrained: fall back to exact lower-bound screening on raw dims
+            return {"kind": "lb", "Xrot": self.state["X"], "W": None,
+                    "mean": None}
+        # native device screening: the pq_lookup Pallas kernel turns the LUT
+        # gather into a one-hot matmul per candidate block (streaming engine
+        # rule "opq"); survivors complete exact distances in original coords
+        pq = self.state["pq"]
+        return {"kind": "opq", "Xrot": self.state["X"], "W": None, "mean": None,
+                "codes": pq["codes"], "books": pq["books"],
+                "splits": pq["splits"], "theta": float(theta),
+                "trained_k": self.state.get("trained_k")}
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,315 @@
+"""Streaming device DCO engine: block-fused corpus scan with a running top-k.
+
+``core.jax_engine.two_stage_topk`` materializes a full (query_chunk, N)
+estimate matrix in HBM and runs ``top_k`` over all N rows per chunk — O(N·Q)
+memory and traffic that caps corpus size per device.  This engine instead
+walks the rotated corpus in candidate row blocks under ``lax.scan``:
+
+  per block   the fused ``dco_scan`` Pallas kernel computes stage-1 partial
+              distances and screens against the *running* tau (its keep-count
+              output is the per-block survivor tally, so no (N, Q) array
+              ever leaves the loop);
+  compaction  survivors are compacted on device — top-``block_capacity`` by
+              estimate — and tail-completed (trailing D-d1 rotated dims);
+  merge       completed rows fold into a carried per-query top-k whose k-th
+              distance tightens tau for every later block — the monotone
+              pruning a one-shot anchor tau cannot achieve.
+
+Peak HBM for the estimate tile drops to O(chunk·row_block +
+chunk·block_capacity), independent of N.  The running tau is certified (the
+k-th best EXACT distance seen so far is always an upper bound on the true
+k-th), so screening never prunes a true neighbor under a lower-bound rule;
+exactness then holds whenever every screen survivor is tail-completed,
+which the engine makes CHECKABLE: ``passed == survivors`` for a query
+certifies that no block overflowed ``block_capacity`` (overflow = some
+screen survivors were dropped by estimate-ranked compaction — the same
+capacity-bounded caveat as the two-stage engine's ``capacity`` cut, at a
+per-block granularity; see DESIGN.md §4 and the ``truncated_queries``
+facade stat).
+
+Decision rules: fdscan | lb | adsampling | dade | ddcres | ratio | opq.
+``opq`` is DDCopq's PQ screening through the ``pq_lookup`` Pallas kernel —
+the rule the two-stage engine can only serve via its exact lower-bound
+fallback.
+
+IVF probing (``probe=``): rows are laid out partition-major
+(``state["row_part"]`` sorted, ``state["row_ids"]`` the permutation); blocks
+whose partition span contains no probed partition get tau=-1, which the
+dco_scan kernel's block-level early exit turns into skipped matmuls, and
+individual rows of unprobed partitions are masked out of the keep set — a
+device-side IVF probe over the same streamed layout as the flat scan.
+
+On CPU (no TPU) the engine defaults to a jnp block path that is numerically
+identical to the kernel semantics (same per-element arithmetic; the kernel's
+mid-scan freezing only changes partials of rows that are masked anyway), so
+tests and benchmarks exercise the same screening decisions the TPU runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.jax_engine import DcoEngineConfig
+
+
+def _round8(v: int) -> int:
+    return max(8, -(-v // 8) * 8)
+
+
+def _final_scale(cfg: DcoEngineConfig, state: dict, D: int):
+    """Per-rule multiplier s such that screening is ``partial * s <= tau``.
+    Used for every dim-block of the kernel: intermediate partials only grow,
+    so testing them against the FINAL scale is conservative (never prunes a
+    row the final test would keep) and needs no per-stage eigen-mass plumbing.
+    """
+    d1 = cfg.d1
+    if cfg.kind in ("lb", "fdscan", "ddcres", "opq"):
+        return jnp.float32(1.0)    # opq screens on PQ adist, not partials
+    if cfg.kind == "adsampling":
+        return jnp.float32((D / d1) / (1.0 + cfg.eps0 / np.sqrt(d1)) ** 2)
+    if cfg.kind == "dade":
+        return 1.0 / (state["mass_d1"] * (1.0 + state["eps_d1"]) ** 2)
+    if cfg.kind == "ratio":
+        return jnp.float32(1.0 / max(cfg.theta, 1e-9))
+    raise ValueError(cfg.kind)
+
+
+def _merge_topk(best_d, best_i, new_d, new_i, k: int):
+    d = jnp.concatenate([best_d, new_d], axis=1)
+    i = jnp.concatenate([best_i, new_i], axis=1)
+    neg, pos = jax.lax.top_k(-d, k)
+    return -neg, jnp.take_along_axis(i, pos, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("row_block",))
+def build_stream_blocks(state: dict, row_block: int) -> dict:
+    """Pad the corpus to a whole number of row blocks and reshape every
+    per-row array to (n_blocks, block, ...).  Pad rows carry id -1.  The
+    layout depends only on the device state and ``row_block``, so callers
+    that search repeatedly (api.backends.JaxBackend) build it ONCE per
+    materialization instead of paying a full-corpus pad copy per query
+    batch (N % row_block != 0 makes ``jnp.pad`` a real O(N*D) copy)."""
+    x_lead = state["x_lead"]
+    n = x_lead.shape[0]
+    B = min(row_block, n)
+    nb = -(-n // B)
+    pad = nb * B - n
+
+    def rows(a, **kw):
+        widths = [(0, pad)] + [(0, 0)] * (a.ndim - 1)
+        return jnp.pad(a, widths, **kw).reshape(nb, B, *a.shape[1:])
+
+    ids = state.get("row_ids")
+    if ids is None:
+        ids = jnp.arange(n, dtype=jnp.int32)
+    xs = {
+        "xl": rows(x_lead),
+        "xt": rows(state["x_tail"]),
+        "lsq": rows(state["lead_sq"]),
+        "tsq": rows(state["tail_sq"]),
+        "ids": rows(ids.astype(jnp.int32), constant_values=-1),
+    }
+    if "row_part" in state:     # partition-major layout for IVF probing
+        xs["part"] = rows(state["row_part"].astype(jnp.int32), mode="edge")
+    if "codes" in state:        # PQ codes for the opq rule
+        xs["codes"] = rows(state["codes"].astype(jnp.int32))
+    return xs
+
+
+def _scan_blocks(cfg: DcoEngineConfig, state, xs, ql, qt, qe, pr, B, D):
+    """Inner lax.scan over corpus row blocks for one query chunk."""
+    from repro.kernels import ref
+    from repro.kernels.ops import _on_tpu, dco_scan_op, pq_lookup_op
+
+    c = ql.shape[0]
+    k = cfg.k
+    C = min(cfg.block_capacity, B)
+    d1, Dt = ql.shape[1], qt.shape[1]
+    # Mosaic requires (8, 128)-multiple tiles on real TPUs; interpret mode
+    # (CPU) keeps tight tiles so tests don't pay for lane padding
+    if cfg.use_kernel and _on_tpu():
+        kb = dict(block_n=256, block_q=128, block_d=128)
+        kb_pq = dict(block_n=128, block_q=8)
+    else:
+        kb = dict(block_n=min(256, _round8(B)), block_q=_round8(c),
+                  block_d=min(128, _round8(d1)))
+        kb_pq = dict(block_n=min(128, _round8(B)), block_q=_round8(c))
+    scale = _final_scale(cfg, state, D)
+    scales_arr = jnp.full((-(-d1 // kb["block_d"]),), scale, jnp.float32)
+    qt_sq = (qt ** 2).sum(1)
+    if cfg.kind == "ddcres":
+        slack = 2.0 * cfg.m * jnp.sqrt(jnp.maximum(qe["var_d1"], 0.0))
+        tail_min = state["tail_sq"].min()
+
+    Cp = min(C + 1, B)      # +1 slot observes the best DROPPED estimate
+
+    def step(carry, blk):
+        best_d, best_i, tau, surv, passed = carry
+        valid = blk["ids"] >= 0                               # (B,)
+        rowhit = None
+        tau_k = jnp.full((c,), jnp.inf) if cfg.kind == "fdscan" else tau
+        if cfg.kind == "ddcres":
+            # partial <= tau_k is implied by the Eq. 7 estimate test below
+            tau_k = tau + slack - qe["qtail_sq"] - tail_min
+        if pr is not None:
+            # block-level probe gate: partition-major rows mean each block
+            # spans [pmin, pmax]; unprobed blocks get tau=-1, which the
+            # kernel's pl.when(any(alive)) turns into skipped matmuls
+            pmin, pmax = blk["part"].min(), blk["part"].max()
+            hit = ((pr >= pmin) & (pr <= pmax)).any(-1)       # (c,)
+            tau_k = jnp.where(hit, tau_k, -1.0)
+            rowhit = (blk["part"][None, :, None] == pr[:, None, :]).any(-1)
+
+        passed_b = None
+        if cfg.kind == "opq":
+            if cfg.use_kernel:
+                adist = pq_lookup_op(blk["codes"], qe["lut"], **kb_pq)
+            else:
+                adist = ref.pq_lookup_ref(blk["codes"], qe["lut"])
+            est = adist.T / cfg.theta                         # (c, B)
+            keep = (est <= tau[:, None]) & valid[None, :]
+            partial = None
+        elif cfg.use_kernel:
+            nvalid = valid.sum().astype(jnp.int32)
+            p, kp, cnt = dco_scan_op(blk["xl"], ql, tau_k, scales_arr,
+                                     nvalid, **kb)
+            partial, keep = p.T, kp.T.astype(bool)            # (c, B)
+            est = partial * scale
+            passed_b = cnt.sum(0)       # the kernel's per-block keep counts
+        else:
+            partial = jnp.maximum(
+                blk["lsq"][None, :] - 2.0 * ql @ blk["xl"].T
+                + (ql ** 2).sum(1)[:, None], 0.0)             # (c, B)
+            est = partial * scale
+            keep = (est <= tau_k[:, None]) & valid[None, :]
+        if cfg.kind == "ddcres":
+            # full-distance estimate (core.methods Eq. 7) refines the
+            # conservative in-kernel partial screen and drives compaction
+            est = (partial + blk["tsq"][None, :]
+                   + qe["qtail_sq"][:, None] - slack[:, None])
+            keep = keep & (est <= tau[:, None])
+            passed_b = None
+        if rowhit is not None:
+            keep = keep & rowhit
+            passed_b = None
+        if passed_b is None:
+            passed_b = keep.sum(-1).astype(jnp.int32)
+
+        if cfg.kind == "fdscan":
+            exact = partial + jnp.maximum(
+                blk["tsq"][None, :] - 2.0 * qt @ blk["xt"].T
+                + qt_sq[:, None], 0.0)
+            ok = valid[None, :] if rowhit is None else (valid[None, :] & rowhit)
+            exact = jnp.where(ok, exact, jnp.inf)
+            new_d, new_i = _merge_topk(
+                best_d, best_i, exact,
+                jnp.broadcast_to(blk["ids"][None, :], (c, B)), k)
+            n_done = ok.sum(-1).astype(jnp.int32)
+            new_tau = jnp.full((c,), jnp.inf)
+            return ((new_d, new_i, new_tau, surv + n_done, passed + n_done),
+                    jnp.full((c,), jnp.inf))
+
+        # ---- on-device compaction: top-C survivors by estimate ------------
+        score = jnp.where(keep, est, jnp.inf)
+        neg_s, cand = jax.lax.top_k(-score, Cp)               # (c, C [+1])
+        # Column C (when present) is the best estimate among rows the budget
+        # DROPPED: the exactness certificate — no true neighbor was lost iff
+        # the final k-th distance stays below every dropped lower bound.  It
+        # is read via a masked reduce and the extra column is disabled by
+        # masking, NOT by slicing: XLA CPU only rewrites the top_k sort into
+        # the O(n log k) TopK custom call when it feeds a single slice, and
+        # a second column slice forced a full row sort (15x slower)
+        col = jax.lax.broadcasted_iota(jnp.int32, (1, Cp), 1)
+        dropped = -jnp.max(jnp.where(col == C, neg_s, -jnp.inf), -1)
+        alive = (neg_s > -jnp.inf) & (col < C)
+        rows = jnp.arange(c)[:, None]
+        c_tail = blk["xt"][cand]                              # (c, Cp, Dt)
+        tail = jnp.maximum(((c_tail - qt[:, None, :]) ** 2).sum(-1), 0.0)
+        if cfg.kind == "opq":
+            c_lead = blk["xl"][cand]
+            exact = jnp.maximum(((c_lead - ql[:, None, :]) ** 2).sum(-1), 0.0) + tail
+        else:
+            exact = partial[rows, cand] + tail
+        exact = jnp.where(alive, exact, jnp.inf)
+        new_d, new_i = _merge_topk(best_d, best_i, exact, blk["ids"][cand], k)
+        new_tau = new_d[:, -1] * cfg.tau_slack                # tightens monotonely
+        return ((new_d, new_i, new_tau,
+                 surv + alive.sum(-1).astype(jnp.int32),
+                 passed + passed_b), dropped)
+
+    init = (jnp.full((c, k), jnp.inf, jnp.float32),
+            jnp.full((c, k), -1, jnp.int32),
+            jnp.full((c,), jnp.inf, jnp.float32),
+            jnp.zeros((c,), jnp.int32), jnp.zeros((c,), jnp.int32))
+    (d, i, _, surv, passed), dropped = jax.lax.scan(step, init, xs)
+    return d, i, surv, passed, dropped.min(0)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _stream_topk_padded(state: dict, xs: dict, q_lead, q_tail, q_extra: dict,
+                        probe, cfg: DcoEngineConfig):
+    d1 = q_lead.shape[1]
+    D = d1 + q_tail.shape[1]
+    B = xs["xl"].shape[1]
+    nq = q_lead.shape[0]
+    c = min(cfg.query_chunk, nq)
+    ql = q_lead.reshape(nq // c, c, -1)
+    qt = q_tail.reshape(nq // c, c, -1)
+    qe = {key: v.reshape(nq // c, c, *v.shape[1:]) for key, v in q_extra.items()}
+    pr = None if probe is None else probe.reshape(nq // c, c, -1)
+
+    def one_chunk(args):
+        cql, cqt, cqe, cpr = args
+        return _scan_blocks(cfg, state, xs, cql, cqt, cqe, cpr, B, D)
+
+    d, i, surv, passed, dmin = jax.lax.map(one_chunk, (ql, qt, qe, pr))
+    k = cfg.k
+    return (d.reshape(nq, k), i.reshape(nq, k),
+            surv.reshape(nq), passed.reshape(nq), dmin.reshape(nq))
+
+
+def stream_topk(state: dict, q_lead, q_tail, cfg: DcoEngineConfig,
+                q_extra: dict | None = None, probe=None, blocks=None):
+    """Streaming top-k over the local corpus for a batch of rotated queries.
+
+    q_lead (Q, d1), q_tail (Q, D - d1).  ``state`` is a
+    ``jax_engine.build_device_state`` export, optionally extended with
+    ``row_ids`` (original ids when rows were permuted), ``row_part`` +
+    ``probe`` (Q, nprobe) for IVF probing, and ``codes`` for the opq rule.
+    ``blocks`` is an optional pre-built :func:`build_stream_blocks` layout
+    (built here when absent — repeat callers should cache it).  Ragged
+    batches pad to a whole number of query chunks; N need not divide
+    ``cfg.row_block``.  Returns (dists_sq (Q, k), ids (Q, k), survivors (Q,)
+    rows tail-completed, passed (Q,) rows passing the screen,
+    dropped_min_est (Q,) the smallest estimate among screen survivors the
+    per-block completion budget dropped, +inf when nothing was dropped).
+    ``dropped_min_est[q] > dists_sq[q, k-1]`` CERTIFIES exactness for
+    lower-bound rules: every dropped row's lower bound exceeds the returned
+    k-th distance, so no true neighbor was truncated.  A failed certificate
+    means block_capacity should be raised (or row_block shrunk).
+    """
+    q_extra = dict(q_extra or {})
+    if cfg.use_kernel is None:
+        from repro.kernels.ops import _on_tpu
+        cfg = dataclasses.replace(cfg, use_kernel=_on_tpu())
+    if blocks is None:
+        blocks = build_stream_blocks(state, cfg.row_block)
+    nq = q_lead.shape[0]
+    if nq == 0:
+        raise ValueError("stream_topk needs at least one query")
+    c = min(cfg.query_chunk, nq)
+    pad = (-nq) % c
+    if pad:
+        q_lead = jnp.pad(q_lead, ((0, pad), (0, 0)))
+        q_tail = jnp.pad(q_tail, ((0, pad), (0, 0)))
+        q_extra = {key: jnp.pad(v, [(0, pad)] + [(0, 0)] * (v.ndim - 1))
+                   for key, v in q_extra.items()}
+        if probe is not None:
+            probe = jnp.pad(probe, ((0, pad), (0, 0)))
+    d, i, s, p, dm = _stream_topk_padded(state, blocks, q_lead, q_tail,
+                                         q_extra, probe, cfg)
+    return d[:nq], i[:nq], s[:nq], p[:nq], dm[:nq]

@@ -11,6 +11,15 @@ paper's per-vector ``break`` (compute is saved; the HBM->VMEM stream for the
 skipped tile is the price of keeping the pipeline static, which is the right
 trade on TPU where stage-1 is MXU-bound for d1 >= 128).
 
+Outputs, per call:
+  partial (N, Q) f32   running partial distances (frozen rows keep the value
+                       at which they were pruned);
+  keep    (N, Q) int8  1 iff the final scaled estimate still clears tau AND
+                       the row index is < ``nrows`` (padding rows never keep);
+  counts  (NB, Q) i32  per-candidate-block keep counts (NB = N / block_n) —
+                       what the streaming engine (core.stream_engine) consumes
+                       so no (N, Q) array ever has to leave the block loop.
+
 Tile sizes: x tile (BN, BD), q tile (BQ, BD), accumulator (BN, BQ) — all
 MXU-aligned multiples of (8, 128) for f32.
 """
@@ -23,9 +32,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(scales_ref, x_ref, q_ref, tau_ref, out_ref, keep_ref,
-            *, nd_blocks: int):
+def _kernel(scales_ref, nrows_ref, x_ref, q_ref, tau_ref, out_ref, keep_ref,
+            cnt_ref, *, nd_blocks: int, block_n: int):
     di = pl.program_id(2)
+    row0 = pl.program_id(1) * block_n
 
     @pl.when(di == 0)
     def _init():
@@ -50,27 +60,34 @@ def _kernel(scales_ref, x_ref, q_ref, tau_ref, out_ref, keep_ref,
     @pl.when(di == nd_blocks - 1)
     def _finish():
         est = out_ref[...] * scales_ref[di]
-        keep_ref[...] = (alive & (est <= tau)).astype(jnp.int8)
+        row = row0 + jax.lax.broadcasted_iota(jnp.int32, est.shape, 0)
+        keep = alive & (est <= tau) & (row < nrows_ref[0])
+        keep_ref[...] = keep.astype(jnp.int8)
+        cnt_ref[...] = keep.astype(jnp.int32).sum(0, keepdims=True)
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "block_q", "block_d",
                                              "interpret"))
-def dco_scan(x, q, tau, scales, *, block_n: int = 256, block_q: int = 128,
-             block_d: int = 128, interpret: bool = False):
+def dco_scan(x, q, tau, scales, nrows, *, block_n: int = 256,
+             block_q: int = 128, block_d: int = 128, interpret: bool = False):
     """x (N, d1) rotated leading dims; q (Q, d1) rotated queries;
-    tau (Q,) squared thresholds; scales (n_dblocks,) estimate multipliers.
-    Returns (partial (N, Q) f32, keep (N, Q) int8).  N, Q, d1 must be tile
-    multiples — ``kernels.ops.dco_scan_op`` pads arbitrary shapes."""
+    tau (Q,) squared thresholds; scales (n_dblocks,) estimate multipliers;
+    nrows (1,) i32 count of valid (non-padding) leading rows of x.
+    Returns (partial (N, Q) f32, keep (N, Q) int8, counts (N/block_n, Q) i32).
+    N, Q, d1 must be tile multiples — ``kernels.ops.dco_scan_op`` pads
+    arbitrary shapes."""
     n, d1 = x.shape
     nq = q.shape[0]
     nd = pl.cdiv(d1, block_d)
-    grid = (pl.cdiv(nq, block_q), pl.cdiv(n, block_n), nd)
-    kernel = functools.partial(_kernel, nd_blocks=nd)
+    nnb = pl.cdiv(n, block_n)
+    grid = (pl.cdiv(nq, block_q), nnb, nd)
+    kernel = functools.partial(_kernel, nd_blocks=nd, block_n=block_n)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((scales.shape[0],), lambda qi, ni, di: (0,)),
+            pl.BlockSpec((1,), lambda qi, ni, di: (0,)),
             pl.BlockSpec((block_n, block_d), lambda qi, ni, di: (ni, di)),
             pl.BlockSpec((block_q, block_d), lambda qi, ni, di: (qi, di)),
             pl.BlockSpec((block_q,), lambda qi, ni, di: (qi,)),
@@ -78,10 +95,12 @@ def dco_scan(x, q, tau, scales, *, block_n: int = 256, block_q: int = 128,
         out_specs=[
             pl.BlockSpec((block_n, block_q), lambda qi, ni, di: (ni, qi)),
             pl.BlockSpec((block_n, block_q), lambda qi, ni, di: (ni, qi)),
+            pl.BlockSpec((1, block_q), lambda qi, ni, di: (ni, qi)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((n, nq), jnp.float32),
             jax.ShapeDtypeStruct((n, nq), jnp.int8),
+            jax.ShapeDtypeStruct((nnb, nq), jnp.int32),
         ],
         interpret=interpret,
-    )(scales, x, q, tau)
+    )(scales, nrows, x, q, tau)

@@ -1,11 +1,14 @@
 """jit'd public wrappers for the Pallas kernels: shape padding + fallbacks.
 
 ``interpret`` defaults to True when no TPU is present so the same call sites
-work in this CPU container and on real hardware.
+work in this CPU container and on real hardware.  Setting
+``REPRO_FORCE_INTERPRET=1`` forces interpret mode regardless of the platform
+(CI runs the kernel parity tests under this flag as an explicit step).
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +25,12 @@ def _on_tpu() -> bool:
         return False
 
 
+def _resolve_interpret(interpret) -> bool:
+    if os.environ.get("REPRO_FORCE_INTERPRET", "").lower() not in ("", "0", "false"):
+        return True
+    return (not _on_tpu()) if interpret is None else interpret
+
+
 def _pad_to(a, axis, mult, value=0.0):
     size = a.shape[axis]
     pad = (-size) % mult
@@ -34,11 +43,15 @@ def _pad_to(a, axis, mult, value=0.0):
 
 @functools.partial(jax.jit, static_argnames=("block_n", "block_q", "block_d",
                                              "interpret"))
-def dco_scan_op(x, q, tau, scales, *, block_n=256, block_q=128, block_d=128,
-                interpret=None):
-    """Padded staged-scan: arbitrary (N, Q, d1); returns (partial, keep)
-    trimmed back to the logical shape.  Pad rows get partial=large, keep=0."""
-    interpret = (not _on_tpu()) if interpret is None else interpret
+def dco_scan_op(x, q, tau, scales, nrows=None, *, block_n=256, block_q=128,
+                block_d=128, interpret=None):
+    """Padded staged-scan: arbitrary (N, Q, d1); returns (partial, keep,
+    counts) with partial/keep trimmed back to the logical shape.  ``nrows``
+    (optional traced scalar) marks how many leading rows of ``x`` are real —
+    rows at or beyond it never keep and never count (the streaming engine
+    passes the valid-row count of its last corpus block).  Pad rows get
+    partial=large, keep=0, and contribute nothing to ``counts``."""
+    interpret = _resolve_interpret(interpret)
     n, d1 = x.shape
     nq = q.shape[0]
     xp = _pad_to(_pad_to(x, 0, block_n), 1, block_d)
@@ -48,15 +61,16 @@ def dco_scan_op(x, q, tau, scales, *, block_n=256, block_q=128, block_d=128,
     sc = scales
     if sc.shape[0] < nd:                            # extend schedule for padding
         sc = jnp.concatenate([sc, jnp.repeat(sc[-1:], nd - sc.shape[0])])
-    partial, keep = dco_scan(xp, qp, taup, sc[:nd], block_n=block_n,
-                             block_q=block_q, block_d=block_d,
-                             interpret=interpret)
-    return partial[:n, :nq], keep[:n, :nq]
+    nr = jnp.reshape(jnp.asarray(n if nrows is None else nrows, jnp.int32), (1,))
+    partial, keep, counts = dco_scan(xp, qp, taup, sc[:nd], nr,
+                                     block_n=block_n, block_q=block_q,
+                                     block_d=block_d, interpret=interpret)
+    return partial[:n, :nq], keep[:n, :nq], counts[:, :nq]
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "block_q", "interpret"))
 def pq_lookup_op(codes, lut, *, block_n=128, block_q=8, interpret=None):
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    interpret = _resolve_interpret(interpret)
     n = codes.shape[0]
     nq = lut.shape[0]
     cp = _pad_to(codes.astype(jnp.int32), 0, block_n, value=0)

@@ -32,6 +32,15 @@ def dco_scan_ref(x, q, tau, scales, block_d: int):
     return acc, alive.astype(jnp.int8)
 
 
+def block_keep_counts_ref(keep, block_n: int):
+    """Oracle for the kernel's per-candidate-block counts output: sum the
+    (N, Q) keep mask over row blocks of ``block_n`` (pad rows count 0)."""
+    n, nq = keep.shape
+    nb = -(-n // block_n)
+    kp = jnp.pad(keep.astype(jnp.int32), ((0, nb * block_n - n), (0, 0)))
+    return kp.reshape(nb, block_n, nq).sum(1)
+
+
 def pq_lookup_ref(codes, lut):
     """codes (N, M) int32, lut (Q, M, K) f32 -> adist (N, Q) f32."""
     # gather formulation: adist[n, q] = sum_m lut[q, m, codes[n, m]]

@@ -151,6 +151,7 @@ def _lower_retrieval(shape_name, mesh, chips, overrides=None):
         _sds((n,), jnp.float32, mesh, spec),
         _sds((rc.query_batch, cfg.d1), sdt, mesh, P()),
         _sds((rc.query_batch, rc.dim - cfg.d1), tdt, mesh, P()),
+        {},                                  # q_extra (per-query rule scalars)
     )
     # model "flops": stage-1 exact cost (the useful work of the scan)
     mf = 2.0 * rc.query_batch * rc.n_total * rc.d1
