@@ -11,7 +11,7 @@ import time
 import traceback
 
 SUITES = ("query", "pruning", "ood", "metrics", "construction", "updates",
-          "hardware", "params", "stream")
+          "hardware", "params", "stream", "adaptive")
 
 
 def main() -> None:

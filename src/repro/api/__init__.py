@@ -12,5 +12,6 @@ See README.md for the method/backend support table.
 """
 from repro.api.session import (INDEX_KINDS, METHODS, SearchSession,  # noqa: F401
                                open_index)
-from repro.api.types import SchedulePolicy, SearchResult  # noqa: F401
+from repro.api.types import (STAT_EXTRA_KEYS, SchedulePolicy,  # noqa: F401
+                             SearchResult)
 from repro.core.engine import QueryBatch, ScanStats  # noqa: F401

@@ -15,7 +15,12 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.engine import QueryBatch, ScanStats, scan_topk
+from repro.core.engine import (EXTRA_EST_SAVED_FLOPS, EXTRA_FALLBACK_BLOCKS,
+                               EXTRA_RULE_TIMELINE, EXTRA_SCREEN_PASS_MEAN,
+                               EXTRA_SURVIVORS_MEAN,
+                               EXTRA_UNCERTIFIED_QUERIES, QueryBatch,
+                               ScanStats, scan_topk)
+from repro.core.policy import PolicyConfig, finalize_adaptive_extra
 
 
 class HostBackend:
@@ -28,11 +33,17 @@ class HostBackend:
         self.index_kind = index_kind
         self.index = index
         self.policy = policy
+        # adaptive fdscan fallback (DESIGN.md §5) for the scan-shaped index
+        # kinds; HNSW graph walks screen tiny per-hop batches with a
+        # different cost structure and ignore it
+        self._pol = PolicyConfig.from_schedule(policy)
 
-    def invalidate(self):           # nothing cached on the host path
+    def invalidate(self):
+        """No-op: nothing is cached on the host path."""
         pass
 
     def search(self, Q, k: int, *, nprobe: int, ef: int):
+        """Batched staged-scan top-k; returns (dists, ids, stats)."""
         m = self.method
         batch = QueryBatch.create(m, Q, self.policy.stage_dims(m.state["D"]))
         dists = np.empty((len(batch), k), np.float32)
@@ -42,16 +53,32 @@ class HostBackend:
             if self.index_kind == "flat":
                 if all_ids is None:
                     all_ids = np.arange(m.state["N"])
-                d, i = scan_topk(m, batch, qi, all_ids, k)
+                d, i = scan_topk(m, batch, qi, all_ids, k, policy=self._pol)
             elif self.index_kind == "ivf":
-                d, i = self.index.search(m, batch, qi, k, nprobe)
+                d, i = self.index.search(m, batch, qi, k, nprobe,
+                                         policy=self._pol)
             else:                   # hnsw
                 d, i = self.index.search(m, batch, qi, k, max(ef, k))
             n = min(k, len(d))
             dists[qi, :n], ids[qi, :n] = d[:n], i[:n]
             if n < k:
                 dists[qi, n:], ids[qi, n:] = np.inf, -1
+        self._finalize_stats(batch.stats, len(batch))
         return dists, ids, batch.stats
+
+    @staticmethod
+    def _finalize_stats(stats, nq: int) -> None:
+        """Fold scan accumulators into the canonical ``extra`` telemetry
+        keys (api.types.STAT_EXTRA_KEYS) so host batches report the same
+        fields as the jax backend."""
+        completed = stats.extra.pop("_completed_total", None)
+        if completed is not None:
+            # no completion budget on the host scan: pass == completed
+            stats.extra[EXTRA_SURVIVORS_MEAN] = completed / max(nq, 1)
+            stats.extra[EXTRA_SCREEN_PASS_MEAN] = completed / max(nq, 1)
+        # every host survivor is exactly completed -> trivially certified
+        stats.extra[EXTRA_UNCERTIFIED_QUERIES] = 0.0
+        finalize_adaptive_extra(stats)
 
 
 class JaxBackend:
@@ -75,6 +102,11 @@ class JaxBackend:
             raise ValueError(
                 "device IVF probing is single-device; mesh-shard a flat "
                 "corpus instead")
+        if mesh is not None and getattr(policy, "adaptive", False):
+            raise ValueError(
+                "the adaptive DCO policy is single-device for now — drop "
+                "SchedulePolicy(adaptive=True) on the mesh path "
+                "(DESIGN.md §5)")
         self.method = method
         self.index_kind = index_kind
         self.index = index
@@ -86,12 +118,17 @@ class JaxBackend:
         self._shard_args = None     # device_put shards (mesh path)
         self._mesh_fns: dict = {}   # cfg -> shard_map fn
         self._list_sizes = None     # IVF partition sizes (probe stats)
+        self._cfg_cache: dict = {}  # k -> DcoEngineConfig (same object per
+                                    # call so jit static-arg caching stays
+                                    # on the identity fast path)
 
     # -- state management ---------------------------------------------------
     def invalidate(self):
+        """Drop materialized device arrays (the session calls this on add)."""
         self._dstate = self._state = self._blocks = self._shard_args = None
         self._list_sizes = None
         self._mesh_fns.clear()
+        self._cfg_cache.clear()
 
     def _materialize(self):
         import jax.numpy as jnp
@@ -149,6 +186,8 @@ class JaxBackend:
     def _config(self, k: int):
         from repro.core.jax_engine import DcoEngineConfig
 
+        if k in self._cfg_cache:
+            return self._cfg_cache[k]
         ds, p = self._dstate, self.policy
         kw = dict(kind=ds["kind"], d1=self._d1, k=k, capacity=p.capacity,
                   query_chunk=p.query_chunk, tau_slack=p.tau_slack,
@@ -162,7 +201,21 @@ class JaxBackend:
             kw["theta"] = self._ratio_theta(k)
         elif ds["kind"] == "opq":
             kw["theta"] = float(ds["theta"])
-        return DcoEngineConfig(**kw)
+        if ds["kind"] != "fdscan":      # fdscan has nothing to fall back to
+            kw["policy"] = PolicyConfig.from_schedule(p)
+        # resolve use_kernel HERE so the cached config is final: an
+        # unresolved None makes stream_topk dataclasses.replace() a fresh
+        # static arg every call, pushing jit dispatch onto the slow path
+        if kw.get("policy") is not None and ds["kind"] != "opq":
+            kw["use_kernel"] = False    # see stream_topk: adaptive forces
+                                        # the jnp dco_scan path (pq_lookup
+                                        # keeps its kernel)
+        elif kw["use_kernel"] is None:
+            from repro.kernels.ops import _on_tpu
+            kw["use_kernel"] = _on_tpu()
+        cfg = DcoEngineConfig(**kw)
+        self._cfg_cache[k] = cfg
+        return cfg
 
     def _ratio_theta(self, k: int) -> float:
         """Largest trained stage <= d1 for the trained k; theta=1.0 (exact
@@ -206,6 +259,8 @@ class JaxBackend:
 
     # -- search --------------------------------------------------------------
     def search(self, Q, k: int, *, nprobe: int, ef: int):
+        """Batched device top-k; returns (dists, ids, stats).  ``ef`` is
+        accepted for signature parity with the host backend (unused)."""
         import jax
         import jax.numpy as jnp
         from repro.core.jax_engine import make_distributed_topk, two_stage_topk
@@ -217,15 +272,15 @@ class JaxBackend:
         ql, qt, qe = self._prep_queries(Q)
         nq, N, D = ql.shape[0], self.method.state["N"], self.method.state["D"]
         engine = self.policy.engine
-        if cfg.kind == "opq" or self.index_kind == "ivf":
+        if cfg.kind == "opq" or self.index_kind == "ivf" or cfg.policy is not None:
             engine = "stream"       # only the streaming engine serves these
         qe = {key: jnp.asarray(v) for key, v in qe.items()}
         cand_per_q = np.full(nq, N, np.float64)
-        passed = dmin = None
+        passed = dmin = report = None
         n_anchor = 0                # two_stage completes k anchors per query
         if self.mesh is None:
             if engine == "two_stage":
-                d, i, surv = two_stage_topk(
+                out = two_stage_topk(
                     self._state, jnp.asarray(ql), jnp.asarray(qt), cfg, qe)
                 n_anchor = nq * k
             else:
@@ -239,10 +294,19 @@ class JaxBackend:
                 if self.index_kind == "ivf":
                     probed, cand_per_q = self._probe(Q, nprobe)
                     probe = jnp.asarray(probed)
-                d, i, surv, passed, dmin = stream_topk(
+                out = stream_topk(
                     self._state, jnp.asarray(ql), jnp.asarray(qt), cfg, qe,
                     probe, blocks=self._blocks)
-            surv = np.asarray(surv)
+            # one batched transfer: the post-jit slices (and the adaptive
+            # report) are tiny lazy dispatches — converting them one
+            # np.asarray at a time serializes a sync per output
+            out = jax.device_get(out)
+            if engine == "two_stage":
+                d, i, surv = out
+            elif cfg.policy is not None:
+                d, i, surv, passed, dmin, report = out
+            else:
+                d, i, surv, passed, dmin = out
         else:
             if cfg not in self._mesh_fns:
                 self._mesh_fns[cfg] = jax.jit(
@@ -267,8 +331,8 @@ class JaxBackend:
             n_sub = int(self._dstate["books"].shape[0])
             stats.dims_scanned = (float((cand_per_q * n_sub).sum())
                                   + float(surv.sum()) * D)
-            stats.extra["survivors_mean"] = float(surv.mean())
-            stats.extra["screen_pass_mean"] = float(np.asarray(passed).mean())
+            stats.extra[EXTRA_SURVIVORS_MEAN] = float(surv.mean())
+            stats.extra[EXTRA_SCREEN_PASS_MEAN] = float(np.asarray(passed).mean())
             self._certify(stats, d, dmin)
         else:
             # stage 1 streams d1 dims for every candidate row; stage 2 (plus
@@ -276,10 +340,17 @@ class JaxBackend:
             # for the ACTUAL survivors
             stats.dims_scanned = (float((cand_per_q * self._d1).sum())
                                   + float(surv.sum() + n_anchor) * (D - self._d1))
-            stats.extra["survivors_mean"] = float(surv.mean())
+            stats.extra[EXTRA_SURVIVORS_MEAN] = float(surv.mean())
             if passed is not None:
-                stats.extra["screen_pass_mean"] = float(np.asarray(passed).mean())
+                stats.extra[EXTRA_SCREEN_PASS_MEAN] = float(np.asarray(passed).mean())
             self._certify(stats, d, dmin)
+        if report is not None:
+            stats.extra[EXTRA_FALLBACK_BLOCKS] = float(
+                np.asarray(report["fallback_blocks"]).mean())
+            stats.extra[EXTRA_EST_SAVED_FLOPS] = float(
+                np.asarray(report["est_saved_flops"]).sum())
+            stats.extra[EXTRA_RULE_TIMELINE] = [
+                float(v) for v in np.asarray(report["rule_timeline"])]
         return (np.asarray(d, np.float32), np.asarray(i, np.int64), stats)
 
     @staticmethod
@@ -291,10 +362,11 @@ class JaxBackend:
         if dmin is None:
             return
         fail = np.asarray(dmin) <= np.asarray(d)[:, -1]
-        stats.extra["uncertified_queries"] = float(fail.mean())
+        stats.extra[EXTRA_UNCERTIFIED_QUERIES] = float(fail.mean())
 
 
 def make_backend(name: str, method, index_kind: str, index, policy, *, mesh=None):
+    """Construct the executor for ``name`` ('host' or 'jax')."""
     if name == "host":
         if mesh is not None:
             raise ValueError("mesh sharding is a jax-backend feature")

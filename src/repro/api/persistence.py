@@ -13,6 +13,7 @@ FORMAT_VERSION = 1
 
 
 def save_session(session, path) -> None:
+    """Pickle a session's fitted method state, index, and policy."""
     payload = {
         "version": FORMAT_VERSION,
         "method_name": session.method.name,
@@ -28,6 +29,7 @@ def save_session(session, path) -> None:
 
 
 def load_session(path, *, backend: str | None = None, mesh=None):
+    """Rebuild a ``SearchSession`` from :func:`save_session` output."""
     from repro.api.session import SearchSession
     from repro.core.methods import make_method
 

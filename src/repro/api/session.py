@@ -46,14 +46,17 @@ class SearchSession:
     # -- introspection -------------------------------------------------------
     @property
     def n(self) -> int:
+        """Number of indexed vectors."""
         return int(self.method.state["N"])
 
     @property
     def dim(self) -> int:
+        """Vector dimensionality."""
         return int(self.method.state["D"])
 
     @property
     def backend_name(self) -> str:
+        """Executing backend: ``"host"`` or ``"jax"``."""
         return self.backend.name
 
     # -- online --------------------------------------------------------------
@@ -83,11 +86,13 @@ class SearchSession:
 
     # -- persistence ---------------------------------------------------------
     def save(self, path) -> None:
+        """Persist the fitted state + index to ``path`` (api.persistence)."""
         from repro.api.persistence import save_session
         save_session(self, path)
 
     @classmethod
     def load(cls, path, *, backend: str | None = None, mesh=None) -> "SearchSession":
+        """Rebuild a saved session; ``backend``/``mesh`` may be overridden."""
         from repro.api.persistence import load_session
         return load_session(path, backend=backend, mesh=mesh)
 

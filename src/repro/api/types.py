@@ -1,11 +1,49 @@
-"""Value types of the facade: scheduling policy and search results."""
+"""Value types of the facade: scheduling policy, search results, stat keys."""
 from __future__ import annotations
 
 import dataclasses
 
 import numpy as np
 
-from repro.core.engine import ScanStats, make_schedule
+from repro.core.engine import (EXTRA_EST_SAVED_FLOPS, EXTRA_FALLBACK_BLOCKS,
+                               EXTRA_RULE_TIMELINE, EXTRA_SCREEN_PASS_MEAN,
+                               EXTRA_SURVIVORS_MEAN,
+                               EXTRA_UNCERTIFIED_QUERIES, ScanStats,
+                               make_schedule)
+
+#: The canonical ``SearchResult.stats.extra`` keys, with their semantics.
+#: Both backends report batch telemetry under these names and only these
+#: names (the constants live in ``core.engine`` so the engines and the
+#: facade share one spelling; this dict is the normative documentation).
+STAT_EXTRA_KEYS: dict = {
+    EXTRA_SURVIVORS_MEAN:
+        "Mean rows per query whose exact distance was completed (stage-2 "
+        "work actually done; measured, not a capacity bound).",
+    EXTRA_SCREEN_PASS_MEAN:
+        "Mean rows per query that passed the screening rule.  On the host "
+        "path this equals survivors_mean (no completion budget); on the jax "
+        "streaming path survivors are additionally capped per block by "
+        "block_capacity, and under the adaptive policy fallback blocks "
+        "complete rows the (shadow) screen rejected.",
+    EXTRA_UNCERTIFIED_QUERIES:
+        "Fraction of queries whose streaming-engine exactness certificate "
+        "failed: some estimate dropped by the per-block completion budget "
+        "was <= the returned k-th distance, so a true neighbor may have "
+        "been truncated (DESIGN.md §4-5).  0.0 on the host path, which "
+        "completes every survivor.  Advisory for estimator rules.",
+    EXTRA_FALLBACK_BLOCKS:
+        "Adaptive policy only: mean candidate blocks per query served by "
+        "the certified fdscan fallback instead of the configured rule.",
+    EXTRA_EST_SAVED_FLOPS:
+        "Adaptive policy only: cost-model estimate of FLOPs saved by "
+        "screening vs an always-fdscan baseline, summed over the batch "
+        "(2 FLOPs per row-dim avoided, minus modeled overhead; negative "
+        "when screening was pure loss).",
+    EXTRA_RULE_TIMELINE:
+        "Adaptive policy only: per block index, the fraction of the batch "
+        "(query chunks on jax, queries on host) served by the fallback — "
+        "the scan-time story of which rule was active when.",
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -24,6 +62,15 @@ class SchedulePolicy:
     survivors tail-completed per block per query (must comfortably exceed k;
     the per-block analogue of ``capacity``), ``use_kernel`` routes stage 1
     through the Pallas kernels (None = only on TPU).  See DESIGN.md §4.
+
+    ``adaptive=True`` arms the adaptive DCO policy (DESIGN.md §5): the
+    engines watch per-block survivor fractions and degrade the configured
+    rule to the certified fdscan fallback while screening is predicted
+    net-negative, recovering when it pays again.  ``fallback_margin`` is
+    how much cheaper than a full scan the cost model must predict screening
+    to be before it is trusted (>1 = demand headroom; raise it to fall back
+    earlier).  Served by the streaming jax engine and the host flat/IVF
+    scan; ignored by host HNSW walks and rejected on the mesh path.
     """
 
     delta0: int = 32
@@ -37,8 +84,12 @@ class SchedulePolicy:
     row_block: int = 4096
     block_capacity: int = 128
     use_kernel: bool | None = None
+    adaptive: bool = False
+    fallback_margin: float = 1.5
 
     def stage_dims(self, D: int) -> list:
+        """Host screening stage dims for dimensionality ``D`` (the paper's
+        (Delta_0, Delta_d) schedule, capped at ``max_stages``)."""
         return make_schedule(D, delta0=self.delta0, delta_d=self.delta_d,
                              max_stages=self.max_stages)
 
@@ -48,9 +99,10 @@ class SearchResult:
     """Batched search output: row ``i`` answers query ``i``.
 
     ``dists`` are squared Euclidean distances (the monotone form every method
-    computes in); ``stats`` aggregates DCO work over the whole batch;
-    ``wall_time_s`` is the facade-measured end-to-end time including online
-    query pre-processing.
+    computes in); ``stats`` aggregates DCO work over the whole batch (see
+    ``STAT_EXTRA_KEYS`` for the ``stats.extra`` telemetry); ``wall_time_s``
+    is the facade-measured end-to-end time including online query
+    pre-processing.
     """
 
     dists: np.ndarray          # (nq, k) float32
@@ -61,12 +113,15 @@ class SearchResult:
 
     @property
     def nq(self) -> int:
+        """Number of queries answered."""
         return int(self.ids.shape[0])
 
     @property
     def k(self) -> int:
+        """Neighbors returned per query."""
         return int(self.ids.shape[1])
 
     @property
     def qps(self) -> float:
+        """Queries per second over the facade-measured wall time."""
         return self.nq / max(self.wall_time_s, 1e-12)

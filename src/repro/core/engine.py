@@ -17,6 +17,17 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+# --- canonical ScanStats.extra keys -----------------------------------------
+# Both backends report batch telemetry under these names and ONLY these names
+# (api.types re-exports and documents them as STAT_EXTRA_KEYS; the fix for
+# the host/jax key drift lives here — add new keys here, never inline).
+EXTRA_SURVIVORS_MEAN = "survivors_mean"          # rows exactly completed / query
+EXTRA_SCREEN_PASS_MEAN = "screen_pass_mean"      # rows passing the screen / query
+EXTRA_UNCERTIFIED_QUERIES = "uncertified_queries"  # frac with failed certificate
+EXTRA_FALLBACK_BLOCKS = "fallback_blocks"        # adaptive: fdscan blocks / query
+EXTRA_EST_SAVED_FLOPS = "est_saved_flops"        # adaptive: saved vs fdscan, batch
+EXTRA_RULE_TIMELINE = "rule_timeline"            # adaptive: fallback frac / block
+
 
 def make_schedule(D: int, delta0: int = 32, delta_d: int = 64, max_stages: int = 4):
     """Stage dims per the paper's (Delta_0, Delta_d) parameterization, capped
@@ -83,12 +94,24 @@ def topk_merge(best_d, best_i, new_d, new_i, k):
 
 
 def scan_topk(method, batch: QueryBatch, qi: int, cand_ids, k, *,
-              block: int = 1024, init_d=None, init_i=None):
+              block: int = 1024, init_d=None, init_i=None, policy=None):
     """DCO-accelerated exact-completion top-k over ``cand_ids`` for query
-    ``qi`` of ``batch``.  Stats accumulate into ``batch.stats``."""
+    ``qi`` of ``batch``.  Stats accumulate into ``batch.stats``.
+
+    ``policy`` (a ``core.policy.PolicyConfig`` with ``adaptive=True``)
+    enables the adaptive fallback of DESIGN.md §5: when the running survivor
+    fraction says screening is net-negative, later blocks skip the stage
+    loop and complete every candidate exactly (an fdscan block).  Fallback
+    only *adds* scanned dims, so results are unchanged — the host scan
+    completes every survivor exhaustively either way.
+    """
     D = method.state["D"]
     ctx, stats = batch.ctx, batch.stats
     stages = method.stage_dims(batch.schedule)
+    hp = None
+    if policy is not None and getattr(policy, "adaptive", False) and stages:
+        from repro.core.policy import HostPolicy
+        hp = HostPolicy(policy, D)
     best_d = init_d if init_d is not None else np.full(k, np.inf, np.float32)
     best_i = init_i if init_i is not None else np.full(k, -1, np.int64)
     cand_ids = np.asarray(cand_ids, np.int64)
@@ -96,22 +119,46 @@ def scan_topk(method, batch: QueryBatch, qi: int, cand_ids, k, *,
         ids = cand_ids[s:s + block]
         tau_sq = float(best_d[-1])
         alive = ids
+        fallback = hp is not None and hp.mode
+        charged_blk = 0.0
         if stats is not None:
             stats.n_dco += len(ids)
             stats.dims_total += len(ids) * D
         if np.isfinite(tau_sq):
-            for d in stages:
-                if len(alive) == 0:
-                    break
-                keep, charged = method.screen(alive, ctx, qi, max(d, 1), tau_sq)
+            if fallback:
+                # shadow screen at the first stage only: keeps the survivor
+                # signal alive for recovery, prunes nothing (alive stays ids)
+                d0 = max(stages[0], 1)
+                keep, charged = method.screen(ids, ctx, qi, d0, tau_sq)
+                charged_blk = len(ids) * charged
                 if stats is not None:
-                    stats.dims_scanned += len(alive) * charged
-                alive = alive[keep]
+                    stats.dims_scanned += charged_blk
+                hp.observe(len(ids), int(keep.sum()), charged)
+            else:
+                for d in stages:
+                    if len(alive) == 0:
+                        break
+                    keep, charged = method.screen(alive, ctx, qi, max(d, 1), tau_sq)
+                    charged_blk += len(alive) * charged
+                    if stats is not None:
+                        stats.dims_scanned += len(alive) * charged
+                    alive = alive[keep]
+                if hp is not None:
+                    hp.observe(len(ids), len(alive), charged_blk / len(ids))
+        if hp is not None:
+            hp.block_served(fallback, len(ids), len(alive), charged_blk)
         if len(alive) == 0:
             continue
         ex = method.exact_sq(alive, ctx, qi)
         if stats is not None:
             stats.dims_scanned += len(alive) * D
             stats.n_true += int((ex <= tau_sq).sum()) if np.isfinite(tau_sq) else len(alive)
+            # host completion == screen pass (no completion budget); the
+            # backend converts these totals to the per-query means of
+            # EXTRA_SURVIVORS_MEAN / EXTRA_SCREEN_PASS_MEAN
+            stats.extra["_completed_total"] = (
+                stats.extra.get("_completed_total", 0) + len(alive))
         best_d, best_i = topk_merge(best_d, best_i, ex.astype(np.float32), alive, k)
+    if hp is not None:
+        hp.flush(stats)
     return best_d, best_i

@@ -55,6 +55,10 @@ class DcoEngineConfig:
     use_kernel: bool | None = None  # Pallas dco_scan/pq_lookup for stage 1
                                     # (None -> only on TPU; CPU uses the
                                     # numerically identical jnp block path)
+    policy: object | None = None    # core.policy.PolicyConfig for the
+                                    # adaptive fdscan fallback (DESIGN.md §5);
+                                    # None = fixed rule (frozen dataclass so
+                                    # the config stays jit-static/hashable)
 
 
 def build_device_state(method_or_arrays, d1: int) -> dict:
@@ -215,6 +219,10 @@ def make_distributed_topk(mesh, cfg: DcoEngineConfig, shard_axes=("data", "model
 
     if engine not in ("stream", "two_stage"):
         raise ValueError(f"engine must be 'stream' or 'two_stage', got {engine!r}")
+    if cfg.policy is not None and getattr(cfg.policy, "adaptive", False):
+        raise ValueError(
+            "the adaptive DCO policy is single-device for now — drop "
+            "SchedulePolicy(adaptive=True) on the mesh path (DESIGN.md §5)")
     extra_state = dict(extra_state or {})
 
     def local_fn(x_lead, x_tail, lead_sq, tail_sq, q_lead, q_tail, q_extra):

@@ -25,7 +25,11 @@ from repro.core import transforms as T
 
 
 class DCOMethod:
-    """Base class.  Subclasses set ``name`` / ``exact`` and implement hooks."""
+    """Base class.  Subclasses set ``name`` / ``exact`` and implement hooks.
+
+    docs/methods.md is the operator's guide to all 8 methods (math sketch,
+    exactness, training, device support, when-to-use matrix).
+    """
 
     name: str = "base"
     exact: bool = True          # never prunes a true positive
@@ -37,6 +41,7 @@ class DCOMethod:
 
     # -- offline ------------------------------------------------------------
     def fit(self, X: np.ndarray):
+        """Fit on the base vectors: store X/norms, then the method hook."""
         X = np.asarray(X, np.float32)
         self.state["X"] = X
         self.state["N"], self.state["D"] = X.shape
@@ -78,6 +83,7 @@ class DCOMethod:
         raise NotImplementedError
 
     def exact_sq(self, ids, ctx, qi):
+        """Exact squared distances in ORIGINAL coordinates for ``ids``."""
         X, q = self.state["X"], ctx["Q"][qi]
         diff = X[ids] - q
         return np.einsum("nd,nd->n", diff, diff)
@@ -105,24 +111,27 @@ class DCOMethod:
 
 
 class FDScanning(DCOMethod):
-    """Full-dimension scan: no screening stages at all."""
+    """Full-dimension scan: no screening stages at all (docs/methods.md)."""
 
     name = "FDScanning"
     exact = True
 
     def stage_dims(self, schedule):
+        """No screening stages: every candidate completes exactly."""
         return []
 
     def screen(self, ids, ctx, qi, d, tau_sq):
+        """Keep everything; charge no dims (there is no screen)."""
         return np.ones(len(ids), bool), 0
 
     def device_state(self):
+        """Engine rule ``fdscan`` over the raw coordinates."""
         return {"kind": "fdscan", "Xrot": self.state["X"], "W": None, "mean": None}
 
 
 class PDScanning(DCOMethod):
     """Partial-dimension scan on ORIGINAL dims: partial ssd is an exact lower
-    bound, so pruning at ``partial > tau`` is exact."""
+    bound, so pruning at ``partial > tau`` is exact (docs/methods.md)."""
 
     name = "PDScanning"
     exact = True
@@ -133,12 +142,14 @@ class PDScanning(DCOMethod):
         return np.einsum("nd,nd->n", diff, diff)
 
     def screen(self, ids, ctx, qi, d, tau_sq):
+        """Exact lower-bound test: partial ssd over the leading ``d`` dims."""
         return self._partial(ids, ctx, qi, d) <= tau_sq, d
 
 
 class PDScanningPlus(PDScanning):
     """PDScanning on PCA-rotated dims (variance-ordered -> earlier exits).
-    Still exact: partial sums over orthonormal directions lower-bound dis^2."""
+    Still exact: partial sums over orthonormal directions lower-bound dis^2
+    (docs/methods.md)."""
 
     name = "PDScanning+"
     exact = True
@@ -155,6 +166,7 @@ class PDScanningPlus(PDScanning):
         return {"Qrot": T.pca_rotate(self.state["pca"], Q)}
 
     def stage_dims(self, schedule):
+        """Stages capped at the PCA rank (rotated dims beyond it are 0)."""
         r = self.state["pca"]["rank"]
         return [d for d in schedule if d < min(r, self.state["D"])]
 
@@ -163,6 +175,7 @@ class PDScanningPlus(PDScanning):
         return np.einsum("nd,nd->n", diff, diff)
 
     def device_state(self):
+        """Engine rule ``lb`` over the PCA-rotated corpus."""
         return {"kind": "lb", "Xrot": self.state["Xrot"],
                 "W": self.state["pca"]["W"], "mean": None}
 
@@ -174,7 +187,7 @@ class PDScanningPlus(PDScanning):
 
 class ADSampling(DCOMethod):
     """Gao & Long [1]: JL rotation; est = sqrt(D/d) * partial; reject H0 when
-    est > (1 + eps0/sqrt(d)) * tau."""
+    est > (1 + eps0/sqrt(d)) * tau (docs/methods.md)."""
 
     name = "ADSampling"
     exact = False
@@ -191,10 +204,12 @@ class ADSampling(DCOMethod):
         return {"Qrot": Q @ self.state["rot"]["P"]}
 
     def stage_dims(self, schedule):
+        """Stages capped at the random-rotation rank."""
         r = self.state["rot"]["rank"]
         return [d for d in schedule if d < min(r, self.state["D"])]
 
     def screen(self, ids, ctx, qi, d, tau_sq):
+        """Scaled-partial hypothesis test at significance ``eps0``."""
         diff = self.state["Xrot"][ids, :d] - ctx["Qrot"][qi, :d]
         partial = np.einsum("nd,nd->n", diff, diff)
         eps0 = self.params.get("eps0", 2.1)
@@ -203,6 +218,7 @@ class ADSampling(DCOMethod):
         return partial * (D / d) <= bound, d
 
     def device_state(self):
+        """Engine rule ``adsampling`` (JL-rotated corpus + eps0)."""
         return {"kind": "adsampling", "Xrot": self.state["Xrot"],
                 "W": self.state["rot"]["P"], "mean": None,
                 "eps0": self.params.get("eps0", 2.1)}
@@ -210,7 +226,7 @@ class ADSampling(DCOMethod):
 
 class DADE(DCOMethod):
     """Deng et al. [2]: PCA rotation; eigen-mass-scaled unbiased estimator with
-    a significance-level bound (Eq. 2)."""
+    a significance-level bound (Eq. 2) (docs/methods.md)."""
 
     name = "DADE"
     exact = False
@@ -238,10 +254,12 @@ class DADE(DCOMethod):
         return {"Qrot": T.pca_rotate(self.state["pca"], Q)}
 
     def stage_dims(self, schedule):
+        """Stages capped at the PCA rank."""
         r = self.state["pca"]["rank"]
         return [d for d in schedule if d < min(r, self.state["D"])]
 
     def screen(self, ids, ctx, qi, d, tau_sq):
+        """Eigen-mass-scaled estimate vs the eps_d significance bound."""
         diff = self.state["Xrot"][ids, :d] - ctx["Qrot"][qi, :d]
         partial = np.einsum("nd,nd->n", diff, diff)
         mass = max(float(self.state["mass"][d - 1]), 1e-9)
@@ -250,6 +268,7 @@ class DADE(DCOMethod):
         return est <= tau_sq * (1.0 + eps) ** 2, d
 
     def device_state(self):
+        """Engine rule ``dade`` (rotated corpus + mass/eps_d arrays)."""
         return {"kind": "dade", "Xrot": self.state["Xrot"],
                 "W": self.state["pca"]["W"], "mean": None,
                 "mass": self.state["mass"], "eps_d": self.state["eps_d"]}
@@ -257,7 +276,8 @@ class DADE(DCOMethod):
 
 class DDCres(DCOMethod):
     """Yang et al. [3] residual cross-term estimator: norm decomposition +
-    Gaussian bound on the unscanned cross term (Eqs. 4-7), tightened by PCA."""
+    Gaussian bound on the unscanned cross term (Eqs. 4-7), tightened by PCA
+    (docs/methods.md)."""
 
     name = "DDCres"
     exact = False
@@ -298,10 +318,12 @@ class DDCres(DCOMethod):
                 "var_suffix": suffix + tail[:, None]}
 
     def stage_dims(self, schedule):
+        """Stages capped at the PCA rank."""
         r = self.state["pca"]["rank"]
         return [d for d in schedule if d < min(r, self.state["D"])]
 
     def screen(self, ids, ctx, qi, d, tau_sq):
+        """Eq. 7 lower-bound estimate with Gaussian cross-term slack."""
         cross = self.state["Xrot"][ids, :d] @ ctx["Qrot"][qi, :d]
         dis_p = self.state["cnorms"][ids] + ctx["qcnorms"][qi] - 2.0 * cross
         m = self.params.get("m", 3.0)
@@ -310,6 +332,7 @@ class DDCres(DCOMethod):
         return est <= tau_sq, d
 
     def device_state(self):
+        """Engine rule ``ddcres`` (centered rotation + variance scalars)."""
         pca = self.state["pca"]
         return {"kind": "ddcres", "Xrot": self.state["Xrot"],
                 "W": pca["W"], "mean": pca["mean"],
@@ -327,7 +350,8 @@ class DDCpca(DCOMethod):
     """Yang et al. [3]: per-(k, d) linear model on (partial, tau).  We use the
     scale-free form  prune <=> partial_sq > theta_{k,d} * tau_sq, with
     theta calibrated on index-generated training samples to a target
-    false-prune rate (the 'linear model M_{k,d}' of Alg. 3)."""
+    false-prune rate (the 'linear model M_{k,d}' of Alg. 3)
+    (docs/methods.md)."""
 
     name = "DDCpca"
     exact = False
@@ -347,6 +371,7 @@ class DDCpca(DCOMethod):
         return {"Qrot": T.pca_rotate(self.state["pca"], Q)}
 
     def stage_dims(self, schedule):
+        """Stages capped at the PCA rank."""
         r = self.state["pca"]["rank"]
         return [d for d in schedule if d < min(r, self.state["D"])]
 
@@ -377,6 +402,7 @@ class DDCpca(DCOMethod):
         return self
 
     def screen(self, ids, ctx, qi, d, tau_sq):
+        """Trained ratio test; untrained stages keep everything."""
         k = self.state.get("trained_k")
         theta = self.state["models"].get((k, d))
         if theta is None:                      # untrained stage: keep all
@@ -386,6 +412,7 @@ class DDCpca(DCOMethod):
         return partial <= theta * tau_sq, d
 
     def device_state(self):
+        """Engine rule ``ratio`` (rotated corpus + trained thetas)."""
         return {"kind": "ratio", "Xrot": self.state["Xrot"],
                 "W": self.state["pca"]["W"], "mean": None,
                 "models": dict(self.state["models"]),
@@ -394,7 +421,8 @@ class DDCpca(DCOMethod):
 
 class DDCopq(DCOMethod):
     """Yang et al. [3]: single per-k linear model on the PQ approximate
-    distance; negatives verified by a full scan (Alg. 3 variant)."""
+    distance; negatives verified by a full scan (Alg. 3 variant)
+    (docs/methods.md)."""
 
     name = "DDCopq"
     exact = False
@@ -416,10 +444,12 @@ class DDCopq(DCOMethod):
         return {"luts": luts}
 
     def stage_dims(self, schedule):
-        return [0]     # a single PQ screening stage; dim arg unused
+        """A single PQ screening stage; the dim argument is unused."""
+        return [0]
 
     def train(self, sample_queries: np.ndarray, k: int, schedule=None,
               *, candidates_per_query: int = 2048, fpr: float = 0.002, seed: int = 0):
+        """Calibrate the per-k adist threshold on sampled queries (Alg. 3)."""
         rng = np.random.default_rng(seed)
         ctx = self.prep_queries(sample_queries)
         N = self.state["N"]
@@ -439,6 +469,7 @@ class DDCopq(DCOMethod):
         return self
 
     def screen(self, ids, ctx, qi, d, tau_sq):
+        """PQ-adist ratio test; charges n_sub 'dims' for the LUT pass."""
         k = self.state.get("trained_k")
         theta = self.state["models"].get(k)
         if theta is None:
@@ -448,6 +479,7 @@ class DDCopq(DCOMethod):
         return adist <= theta * tau_sq, n_sub   # charge n_sub 'dims' for the LUT pass
 
     def device_state(self):
+        """Engine rule ``opq`` when trained; exact-lb fallback otherwise."""
         theta = self.state["models"].get(self.state.get("trained_k"))
         if theta is None:
             # untrained: fall back to exact lower-bound screening on raw dims
@@ -481,4 +513,5 @@ SOTA = ("ADSampling", "DADE", "DDCres", "DDCpca", "DDCopq")
 
 
 def make_method(name: str, **params) -> DCOMethod:
+    """Instantiate one of the paper's 8 methods by facade name."""
     return ALL_METHODS[name](**params)

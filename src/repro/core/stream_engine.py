@@ -43,6 +43,16 @@ On CPU (no TPU) the engine defaults to a jnp block path that is numerically
 identical to the kernel semantics (same per-element arithmetic; the kernel's
 mid-scan freezing only changes partials of rows that are masked anyway), so
 tests and benchmarks exercise the same screening decisions the TPU runs.
+
+With an adaptive ``core.policy.PolicyConfig`` on the config, the engine
+additionally serves each block by whichever rule is winning (DESIGN.md §5):
+a pre-scan seed certifies an initial tau and dispatches clearly-shifted
+query chunks to a conditional-free full-scan body; all other chunks run the
+screened scan with a ``PolicyState`` in the carry and a single per-block
+escape that completes a block exactly when its survivors spill the
+completion budget or the running cost model says screening is net-negative.
+Screened blocks never drop rows under the policy, so adaptive scans are
+certified by construction.
 """
 from __future__ import annotations
 
@@ -120,8 +130,28 @@ def build_stream_blocks(state: dict, row_block: int) -> dict:
     return xs
 
 
-def _scan_blocks(cfg: DcoEngineConfig, state, xs, ql, qt, qe, pr, B, D):
-    """Inner lax.scan over corpus row blocks for one query chunk."""
+def _adaptive(cfg: DcoEngineConfig) -> bool:
+    """True when ``cfg`` carries an active adaptive policy (core.policy);
+    the pure fdscan rule has nothing to fall back to."""
+    return (cfg.policy is not None and cfg.policy.adaptive
+            and cfg.kind != "fdscan")
+
+
+def _scan_blocks(cfg: DcoEngineConfig, state, xs, ql, qt, qe, pr, B, D,
+                 q_ok=None, init_tau=None, init_ewma=None, forced=False):
+    """Inner lax.scan over corpus row blocks for one query chunk.
+
+    When ``cfg.policy`` is adaptive, the carry also holds a ``PolicyState``
+    (per-query EWMA of the block survivor fraction plus the chunk's current
+    mode) and each block is served through either the screened compaction
+    path or a full fdscan completion — the certified fallback of DESIGN.md
+    §5.  ``q_ok`` masks padding queries out of the chunk-level decision;
+    ``init_tau``/``init_ewma`` carry the pre-scan seed (certified tau upper
+    bound + sample pass fraction); ``forced=True`` (python-static) runs the
+    dedicated conditional-free full-scan body for chunks the seed already
+    placed in fallback.
+    """
+    from repro.core.policy import pass_threshold
     from repro.kernels import ref
     from repro.kernels.ops import _on_tpu, dco_scan_op, pq_lookup_op
 
@@ -146,6 +176,66 @@ def _scan_blocks(cfg: DcoEngineConfig, state, xs, ql, qt, qe, pr, B, D):
         tail_min = state["tail_sq"].min()
 
     Cp = min(C + 1, B)      # +1 slot observes the best DROPPED estimate
+
+    pol = cfg.policy if _adaptive(cfg) else None
+    if pol is not None:
+        # cost-model threshold on the survivor fraction (static at trace
+        # time): opq screens n_sub LUT dims and completes all D original
+        # dims; partial rules screen d1 and complete the D - d1 tail
+        if cfg.kind == "opq":
+            d_screen, d_complete = float(qe["lut"].shape[1]), float(D)
+        else:
+            d_screen, d_complete = float(d1), float(D - d1)
+        thr = pass_threshold(D, d_screen, d_complete,
+                             pol.fallback_margin, pol.overhead_dims)
+
+    def _complete_screened(best_d, best_i, tau, keep, est, partial, blk):
+        # ---- on-device compaction: top-C survivors by estimate ------------
+        score = jnp.where(keep, est, jnp.inf)
+        neg_s, cand = jax.lax.top_k(-score, Cp)               # (c, C [+1])
+        # Column C (when present) is the best estimate among rows the budget
+        # DROPPED: the exactness certificate — no true neighbor was lost iff
+        # the final k-th distance stays below every dropped lower bound.  It
+        # is read via a masked reduce and the extra column is disabled by
+        # masking, NOT by slicing: XLA CPU only rewrites the top_k sort into
+        # the O(n log k) TopK custom call when it feeds a single slice, and
+        # a second column slice forced a full row sort (15x slower)
+        col = jax.lax.broadcasted_iota(jnp.int32, (1, Cp), 1)
+        dropped = -jnp.max(jnp.where(col == C, neg_s, -jnp.inf), -1)
+        alive = (neg_s > -jnp.inf) & (col < C)
+        rows = jnp.arange(c)[:, None]
+        c_tail = blk["xt"][cand]                              # (c, Cp, Dt)
+        tail = jnp.maximum(((c_tail - qt[:, None, :]) ** 2).sum(-1), 0.0)
+        if cfg.kind == "opq":
+            c_lead = blk["xl"][cand]
+            exact = jnp.maximum(((c_lead - ql[:, None, :]) ** 2).sum(-1), 0.0) + tail
+        else:
+            exact = partial[rows, cand] + tail
+        exact = jnp.where(alive, exact, jnp.inf)
+        new_d, new_i = _merge_topk(best_d, best_i, exact, blk["ids"][cand], k)
+        # min() keeps a tighter seeded tau alive until the running top-k
+        # beats it; without a seed the k-th only decreases, so it's a no-op
+        new_tau = jnp.minimum(tau, new_d[:, -1] * cfg.tau_slack)
+        return (new_d, new_i, new_tau,
+                alive.sum(-1).astype(jnp.int32), dropped)
+
+    def _complete_all(best_d, best_i, tau, partial, ok, blk):
+        # certified fallback: every candidate row is completed exactly over
+        # all D dims, so nothing is dropped (dropped = +inf) and the
+        # per-query exactness certificate is preserved by construction
+        if partial is None:       # opq screens on adist; lead never computed
+            partial = jnp.maximum(
+                blk["lsq"][None, :] - 2.0 * ql @ blk["xl"].T
+                + (ql ** 2).sum(1)[:, None], 0.0)
+        exact = partial + jnp.maximum(
+            blk["tsq"][None, :] - 2.0 * qt @ blk["xt"].T + qt_sq[:, None], 0.0)
+        exact = jnp.where(ok, exact, jnp.inf)
+        new_d, new_i = _merge_topk(
+            best_d, best_i, exact,
+            jnp.broadcast_to(blk["ids"][None, :], (c, B)), k)
+        new_tau = jnp.minimum(tau, new_d[:, -1] * cfg.tau_slack)
+        return (new_d, new_i, new_tau, ok.sum(-1).astype(jnp.int32),
+                jnp.full((c,), jnp.inf, jnp.float32))
 
     def step(carry, blk):
         best_d, best_i, tau, surv, passed = carry
@@ -213,40 +303,174 @@ def _scan_blocks(cfg: DcoEngineConfig, state, xs, ql, qt, qe, pr, B, D):
             return ((new_d, new_i, new_tau, surv + n_done, passed + n_done),
                     jnp.full((c,), jnp.inf))
 
-        # ---- on-device compaction: top-C survivors by estimate ------------
-        score = jnp.where(keep, est, jnp.inf)
-        neg_s, cand = jax.lax.top_k(-score, Cp)               # (c, C [+1])
-        # Column C (when present) is the best estimate among rows the budget
-        # DROPPED: the exactness certificate — no true neighbor was lost iff
-        # the final k-th distance stays below every dropped lower bound.  It
-        # is read via a masked reduce and the extra column is disabled by
-        # masking, NOT by slicing: XLA CPU only rewrites the top_k sort into
-        # the O(n log k) TopK custom call when it feeds a single slice, and
-        # a second column slice forced a full row sort (15x slower)
-        col = jax.lax.broadcasted_iota(jnp.int32, (1, Cp), 1)
-        dropped = -jnp.max(jnp.where(col == C, neg_s, -jnp.inf), -1)
-        alive = (neg_s > -jnp.inf) & (col < C)
-        rows = jnp.arange(c)[:, None]
-        c_tail = blk["xt"][cand]                              # (c, Cp, Dt)
-        tail = jnp.maximum(((c_tail - qt[:, None, :]) ** 2).sum(-1), 0.0)
-        if cfg.kind == "opq":
-            c_lead = blk["xl"][cand]
-            exact = jnp.maximum(((c_lead - ql[:, None, :]) ** 2).sum(-1), 0.0) + tail
-        else:
-            exact = partial[rows, cand] + tail
-        exact = jnp.where(alive, exact, jnp.inf)
-        new_d, new_i = _merge_topk(best_d, best_i, exact, blk["ids"][cand], k)
-        new_tau = new_d[:, -1] * cfg.tau_slack                # tightens monotonely
-        return ((new_d, new_i, new_tau,
-                 surv + alive.sum(-1).astype(jnp.int32),
+        new_d, new_i, new_tau, completed, dropped = _complete_screened(
+            best_d, best_i, tau, keep, est, partial, blk)
+        return ((new_d, new_i, new_tau, surv + completed,
                  passed + passed_b), dropped)
+
+    # ---- adaptive serving (DESIGN.md §5) ----------------------------------
+    # One lax.cond per block whose branches are SELF-CONTAINED (each computes
+    # its own stage-1 partial): a conditional boundary through shared big
+    # intermediates forces XLA to materialize them and breaks the fused
+    # screen->compact chain, which measured 25-45% on CPU.  The mode is
+    # decided from history — the seeded pre-scan pass fraction plus every
+    # earlier block's telemetry — and the screened branch carries a rare
+    # recompute-from-scratch SPILL escape (survivors over block_capacity
+    # complete the block exactly), so screened blocks never drop rows and
+    # adaptive scans are certified by construction.
+    q_okm = jnp.ones((c,), bool) if q_ok is None else q_ok
+
+    def _lead_partial(blk):
+        return jnp.maximum(
+            blk["lsq"][None, :] - 2.0 * ql @ blk["xl"].T
+            + (ql ** 2).sum(1)[:, None], 0.0)                 # (c, B)
+
+    def _screen_of(partial, blk, tau, ok):
+        """(est, keep) for this block under the running tau; ``partial`` is
+        the lead partial (None for opq, which screens on the PQ adist)."""
+        if cfg.kind == "opq":
+            if cfg.use_kernel:
+                adist = pq_lookup_op(blk["codes"], qe["lut"], **kb_pq)
+            else:
+                adist = ref.pq_lookup_ref(blk["codes"], qe["lut"])
+            est = adist.T / cfg.theta
+        elif cfg.kind == "ddcres":
+            est = (partial + blk["tsq"][None, :]
+                   + qe["qtail_sq"][:, None] - slack[:, None])
+        else:
+            est = partial * scale
+        return est, (est <= tau[:, None]) & ok
+
+    def step_adaptive(carry, blk):
+        # ONE conditional per block: the screened body runs fused exactly
+        # like the fixed engine, then an ESCAPE serves the block fully when
+        # (a) the screen spilled its completion budget — the capacity cut
+        # would drop rows, so the exact completion keeps the scan CERTIFIED
+        # BY CONSTRUCTION — or (b) the running cost model says screening is
+        # net-negative (mode, with hysteresis).  The escape recomputes the
+        # lead from scratch so the common no-escape path stays fusible.
+        best_d, best_i, tau, surv, passed, ps = carry
+        valid = blk["ids"] >= 0
+        rowhit = None
+        if pr is not None:
+            rowhit = (blk["part"][None, :, None] == pr[:, None, :]).any(-1)
+        ok = (jnp.broadcast_to(valid[None, :], (c, B)) if rowhit is None
+              else (valid[None, :] & rowhit))
+        n_ok = ok.sum(-1).astype(jnp.int32)
+
+        partial = None if cfg.kind == "opq" else _lead_partial(blk)
+        est, keep = _screen_of(partial, blk, tau, ok)
+        passed_b = keep.sum(-1).astype(jnp.int32)
+        spill = (q_okm & (passed_b > C)).any()
+        esc = spill | ps["mode"]
+        # both completions live INSIDE the cond so an escaped block (steady
+        # fallback, or a spill) never pays the screened compaction; the
+        # escape reuses the stage-1 partial, which crosses the boundary
+        # anyway as an operand of the screened branch
+        new_d, new_i, new_tau, completed, dropped = jax.lax.cond(
+            esc,
+            lambda: _complete_all(best_d, best_i, tau, partial, ok, blk),
+            lambda: _complete_screened(best_d, best_i, tau, keep, est,
+                                       partial, blk))
+
+        # policy evidence.  A SPILL means screening lost this block
+        # outright (it still paid a full completion): full-strength
+        # evidence, so chronic spills flip the chunk into steady fallback.
+        # Other blocks contribute the real screen fraction, which keeps
+        # recovery possible.  Cold non-spill blocks carry no signal
+        # (tau=inf makes the screen trivial).
+        frac = passed_b.astype(jnp.float32) / jnp.maximum(n_ok, 1)
+        warm = (n_ok > 0) & ~jnp.isinf(tau)
+        spill_evt = spill & ~ps["mode"]
+        obs = (warm | spill_evt) & (n_ok > 0)
+        sig = jnp.where(spill_evt, 1.0, frac)
+        a = jnp.float32(pol.ewma_alpha)
+        new_ewma = jnp.where(obs & (ps["n"] > 0),
+                             a * sig + (1.0 - a) * ps["ewma"], ps["ewma"])
+        new_ewma = jnp.where(obs & (ps["n"] == 0), sig, new_ewma)
+        new_n = ps["n"] + obs
+        # next block's mode: a chunk falls back when ANY member query's
+        # model says screening is net-negative (correctness-first; batch
+        # OOD queries together so they don't drag ID chunks), and recovers
+        # only once every member is back under the hysteresis band
+        live = q_okm & (new_n > 0)
+        want = (live & (new_ewma > thr)).any()
+        stay = (live & (new_ewma > thr * pol.hysteresis)).any()
+        next_mode = jnp.where(ps["mode"], stay, want)
+        # an escaped block paid the screen bookkeeping on top of the full
+        # completion; a screened block saves the unscanned tail
+        saved_blk = jnp.where(
+            esc, -(d_screen + pol.overhead_dims) * n_ok,
+            (n_ok - completed) * d_complete - pol.overhead_dims * n_ok)
+        new_ps = {
+            "ewma": new_ewma, "n": new_n, "mode": next_mode,
+            "fb": ps["fb"] + esc.astype(jnp.int32),
+            "saved": ps["saved"] + 2.0 * saved_blk,
+        }
+        return ((new_d, new_i, new_tau, surv + completed, passed + passed_b,
+                 new_ps), (dropped, esc.astype(jnp.float32)))
 
     init = (jnp.full((c, k), jnp.inf, jnp.float32),
             jnp.full((c, k), -1, jnp.int32),
             jnp.full((c,), jnp.inf, jnp.float32),
             jnp.zeros((c,), jnp.int32), jnp.zeros((c,), jnp.int32))
-    (d, i, _, surv, passed), dropped = jax.lax.scan(step, init, xs)
-    return d, i, surv, passed, dropped.min(0)
+    if pol is None:
+        (d, i, _, surv, passed), dropped = jax.lax.scan(step, init, xs)
+        return d, i, surv, passed, dropped.min(0)
+
+    nb = xs["xl"].shape[0]
+    if init_tau is None:
+        init_tau = jnp.full((c,), jnp.inf, jnp.float32)
+    if init_ewma is None:
+        init_ewma = jnp.zeros((c,), jnp.float32)
+        init_n = jnp.zeros((c,), jnp.int32)
+    elif cfg.kind == "opq":         # opq seed evidence needs adist: neutral
+        init_ewma = jnp.zeros((c,), jnp.float32)
+        init_n = jnp.zeros((c,), jnp.int32)
+    else:
+        init_n = jnp.ones((c,), jnp.int32)
+    init = init[:2] + (init_tau,) + init[3:]
+
+    if forced:
+        # the whole chunk starts in fallback (the seed already said
+        # screening is net-negative): serve it with a dedicated fused body —
+        # the switching machinery never enters this graph, so a shifted
+        # chunk costs ~a plain full scan plus the seed
+        def step_full(carry, blk):
+            best_d, best_i, tau, surv, passed = carry
+            valid = blk["ids"] >= 0
+            if pr is None:
+                ok = jnp.broadcast_to(valid[None, :], (c, B))
+            else:
+                rowhit = (blk["part"][None, :, None] == pr[:, None, :]).any(-1)
+                ok = valid[None, :] & rowhit
+            exact = _lead_partial(blk) + jnp.maximum(
+                blk["tsq"][None, :] - 2.0 * qt @ blk["xt"].T
+                + qt_sq[:, None], 0.0)
+            exact = jnp.where(ok, exact, jnp.inf)
+            nd, ni = _merge_topk(
+                best_d, best_i, exact,
+                jnp.broadcast_to(blk["ids"][None, :], (c, B)), k)
+            ntau = jnp.minimum(tau, nd[:, -1] * cfg.tau_slack)
+            n_ok = ok.sum(-1).astype(jnp.int32)
+            return (nd, ni, ntau, surv + n_ok, passed + n_ok), None
+
+        (d, i, _, surv, passed), _ = jax.lax.scan(step_full, init, xs)
+        report = {"fb": jnp.full((c,), nb, jnp.int32),
+                  "saved": jnp.zeros((c,), jnp.float32),
+                  "timeline": jnp.ones((nb,), jnp.float32)}
+        return (d, i, surv, passed, jnp.full((c,), jnp.inf, jnp.float32),
+                report)
+
+    ini = init + ({"ewma": init_ewma, "n": init_n,
+                   "mode": jnp.asarray(False),
+                   "fb": jnp.asarray(0, jnp.int32),
+                   "saved": jnp.zeros((c,), jnp.float32)},)
+    (d, i, _, surv, passed, ps), (dropped, modes) = jax.lax.scan(
+        step_adaptive, ini, xs)
+    report = {"fb": jnp.broadcast_to(ps["fb"], (c,)),
+              "saved": ps["saved"], "timeline": modes}
+    return d, i, surv, passed, dropped.min(0), report
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -272,6 +496,58 @@ def _stream_topk_padded(state: dict, xs: dict, q_lead, q_tail, q_extra: dict,
             surv.reshape(nq), passed.reshape(nq), dmin.reshape(nq))
 
 
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _seed_eval(state: dict, xs: dict, q_lead, q_tail, q_extra: dict,
+               cfg: DcoEngineConfig):
+    """Pre-scan seed for the adaptive policy, over the whole padded batch.
+
+    The k-th exact distance over a row sample upper-bounds the true k-th
+    (CERTIFIED: screening against it can never prune a true neighbor under
+    a lower-bound rule), and the sample's pass fraction against that tau
+    estimates the corpus survivor fraction before any block is scanned.
+    Expected pass rate vs the seeded tau is ~k/S per row, so S keeps early
+    blocks under the spill gate (k/S * row_block << block_capacity).
+    Returns (tau0 (nq,), ewma0 (nq,)).
+    """
+    B = xs["xl"].shape[1]
+    D = q_lead.shape[1] + q_tail.shape[1]
+    S = min(1024, B)
+    ql, qt = q_lead, q_tail
+    sid = xs["ids"][0, :S]
+    svalid = sid[None, :] >= 0
+    lead_s = jnp.maximum(
+        xs["lsq"][0, :S][None, :] - 2.0 * ql @ xs["xl"][0, :S].T
+        + (ql ** 2).sum(1)[:, None], 0.0)
+    ex = lead_s + jnp.maximum(
+        xs["tsq"][0, :S][None, :] - 2.0 * qt @ xs["xt"][0, :S].T
+        + (qt ** 2).sum(1)[:, None], 0.0)
+    ex = jnp.where(svalid, ex, jnp.inf)
+    neg, _ = jax.lax.top_k(-ex, min(cfg.k, S))
+    tau0 = -neg[:, -1] * cfg.tau_slack
+    if cfg.kind == "opq":           # opq evidence needs adist: stay neutral
+        return tau0, jnp.zeros(ql.shape[0], jnp.float32)
+    if cfg.kind == "ddcres":
+        slack = 2.0 * cfg.m * jnp.sqrt(jnp.maximum(q_extra["var_d1"], 0.0))
+        est_s = (lead_s + xs["tsq"][0, :S][None, :]
+                 + q_extra["qtail_sq"][:, None] - slack[:, None])
+    else:
+        est_s = lead_s * _final_scale(cfg, state, D)
+    pass_s = ((est_s <= tau0[:, None]) & svalid).sum(-1)
+    ewma0 = (pass_s / jnp.maximum(svalid.sum(-1), 1)).astype(jnp.float32)
+    return tau0, ewma0
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "forced"))
+def _stream_chunk(state: dict, xs: dict, ql, qt, qe: dict, pr, qv, tau0, ew0,
+                  cfg: DcoEngineConfig, forced: bool):
+    """One query chunk through the adaptive engine (forced=True: the
+    conditional-free full-scan body for chunks the seed put in fallback)."""
+    D = ql.shape[1] + qt.shape[1]
+    B = xs["xl"].shape[1]
+    return _scan_blocks(cfg, state, xs, ql, qt, qe, pr, B, D, q_ok=qv,
+                        init_tau=tau0, init_ewma=ew0, forced=forced)
+
+
 def stream_topk(state: dict, q_lead, q_tail, cfg: DcoEngineConfig,
                 q_extra: dict | None = None, probe=None, blocks=None):
     """Streaming top-k over the local corpus for a batch of rotated queries.
@@ -291,11 +567,29 @@ def stream_topk(state: dict, q_lead, q_tail, cfg: DcoEngineConfig,
     lower-bound rules: every dropped row's lower bound exceeds the returned
     k-th distance, so no true neighbor was truncated.  A failed certificate
     means block_capacity should be raised (or row_block shrunk).
+
+    When ``cfg.policy`` is an adaptive ``core.policy.PolicyConfig`` the
+    engine serves blocks adaptively (DESIGN.md §5) and appends a sixth
+    return value, a report dict with per-query ``fallback_blocks`` /
+    ``est_saved_flops`` and a per-block ``rule_timeline`` (fraction of query
+    chunks served by fdscan).  Adaptive mode forces ``use_kernel=False`` for
+    the dco_scan stage: the Pallas kernel freezes pruned rows mid-block, so
+    its partials cannot be reused by the fallback branch's full completion
+    (the pq_lookup path is unaffected).
     """
     q_extra = dict(q_extra or {})
+    adaptive = _adaptive(cfg)
+    # adaptive mode forces the jnp dco_scan path (the kernel freezes pruned
+    # rows mid-block, so its partials can't feed an escape's full
+    # completion); opq screens via pq_lookup, whose adist is valid for all
+    # rows, so it keeps its kernel
+    force_jnp = adaptive and cfg.kind != "opq"
+    if force_jnp and cfg.use_kernel:
+        cfg = dataclasses.replace(cfg, use_kernel=False)
     if cfg.use_kernel is None:
         from repro.kernels.ops import _on_tpu
-        cfg = dataclasses.replace(cfg, use_kernel=_on_tpu())
+        cfg = dataclasses.replace(cfg, use_kernel=False if force_jnp
+                                  else _on_tpu())
     if blocks is None:
         blocks = build_stream_blocks(state, cfg.row_block)
     nq = q_lead.shape[0]
@@ -310,6 +604,58 @@ def stream_topk(state: dict, q_lead, q_tail, cfg: DcoEngineConfig,
                    for key, v in q_extra.items()}
         if probe is not None:
             probe = jnp.pad(probe, ((0, pad), (0, 0)))
-    d, i, s, p, dm = _stream_topk_padded(state, blocks, q_lead, q_tail,
-                                         q_extra, probe, cfg)
-    return d[:nq], i[:nq], s[:nq], p[:nq], dm[:nq]
+    if not adaptive:
+        d, i, s, p, dm = _stream_topk_padded(state, blocks, q_lead, q_tail,
+                                             q_extra, probe, cfg)
+        return d[:nq], i[:nq], s[:nq], p[:nq], dm[:nq]
+
+    # ---- adaptive orchestration (DESIGN.md §5) ----------------------------
+    # Per-chunk python dispatch: the seed's pass fraction decides, per query
+    # chunk and BEFORE any block is scanned, whether the chunk enters the
+    # switching scan or the dedicated conditional-free full-scan body.  The
+    # decision is one tiny host sync per batch; keeping it out of the jitted
+    # graph avoids a whole-scan lax.cond, which measurably taxes the
+    # executed branch on CPU.  (IVF probing gets no seed — sampled rows may
+    # not be probe candidates — so probed chunks always run the switching
+    # scan, whose spill gate keeps them certified.)
+    from repro.core.policy import pass_threshold
+    nqp = q_lead.shape[0]
+    nchunks = nqp // c
+    q_valid = jnp.arange(nqp) < nq
+    if probe is None:
+        tau0, ew0 = _seed_eval(state, blocks, q_lead, q_tail, q_extra, cfg)
+        D = q_lead.shape[1] + q_tail.shape[1]
+        if cfg.kind == "opq":
+            d_screen, d_complete = float(q_extra["lut"].shape[1]), float(D)
+        else:
+            d_screen, d_complete = float(q_lead.shape[1]), float(D - q_lead.shape[1])
+        thr = pass_threshold(D, d_screen, d_complete,
+                             cfg.policy.fallback_margin,
+                             cfg.policy.overhead_dims)
+        chunk_full = np.asarray(
+            (ew0 > thr) & q_valid).reshape(nchunks, c).any(1)
+    else:
+        tau0 = ew0 = None
+        chunk_full = np.zeros(nchunks, bool)
+    outs = []
+    for ci in range(nchunks):
+        sl = slice(ci * c, (ci + 1) * c)
+        outs.append(_stream_chunk(
+            state, blocks, q_lead[sl], q_tail[sl],
+            {key: v[sl] for key, v in q_extra.items()},
+            None if probe is None else probe[sl], q_valid[sl],
+            None if tau0 is None else tau0[sl],
+            None if ew0 is None else ew0[sl],
+            cfg, bool(chunk_full[ci])))
+    if nchunks == 1:
+        d, i, s, p, dm, rep = outs[0]
+    else:
+        d, i, s, p, dm = (jnp.concatenate([o[j] for o in outs])
+                          for j in range(5))
+        rep = {key: jnp.concatenate([o[5][key] for o in outs])
+               for key in ("fb", "saved")}
+        rep["timeline"] = jnp.stack([o[5]["timeline"] for o in outs]).mean(0)
+    report = {"fallback_blocks": rep["fb"][:nq],
+              "est_saved_flops": rep["saved"][:nq],
+              "rule_timeline": jnp.atleast_1d(rep["timeline"])}
+    return d[:nq], i[:nq], s[:nq], p[:nq], dm[:nq], report

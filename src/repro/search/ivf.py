@@ -86,6 +86,10 @@ class IVFIndex:
         lists = [self.lists[j] for j in order]
         return np.concatenate(lists) if lists else np.empty(0, np.int64)
 
-    def search(self, method, batch: QueryBatch, qi: int, k: int, nprobe: int):
+    def search(self, method, batch: QueryBatch, qi: int, k: int, nprobe: int,
+               *, policy=None):
+        """Probe ``nprobe`` partitions and run the staged DCO scan over their
+        concatenated candidates; ``policy`` threads the adaptive fdscan
+        fallback (core.policy) into the scan."""
         cands = self.probe_ids(batch.Q[qi], nprobe)
-        return scan_topk(method, batch, qi, cands, k)
+        return scan_topk(method, batch, qi, cands, k, policy=policy)

@@ -158,6 +158,39 @@ def load_dataset(name: str, *, scale: float = 1.0, seed: int = 0) -> VectorDatas
     return ds
 
 
+def make_ood_queries(X: np.ndarray, nq: int, *, severity: float = 1.0,
+                     seed: int = 123) -> np.ndarray:
+    """The OOD knob: queries whose per-direction energy profile is shifted
+    away from the base corpus spectrum by ``severity``.
+
+    In the principal basis of ``X``, in-distribution data has std
+    ``sqrt(lam_i)`` along direction ``i``.  ``severity=0`` draws queries
+    matching that profile (ID-like); ``severity=1`` draws from the REVERSED
+    profile — energy concentrated in the lowest-variance directions, the
+    modality-shift regime where lower-bound/estimator screening collapses
+    (the paper's §V-B finding, and what drives the adaptive policy's
+    fallback in bench_adaptive / tests).  Intermediate values interpolate
+    geometrically.  Query norms are rescaled to the mean base-row norm so
+    thresholds stay in-range (same convention as the built-in ``Q_ood``).
+    """
+    X = np.asarray(X, np.float32)
+    rng = np.random.default_rng((zlib.crc32(b"oodknob") + 7919 * seed) % (2 ** 31))
+    mu = X.mean(0)
+    sub = X[rng.choice(X.shape[0], min(X.shape[0], 20_000), replace=False)] - mu
+    cov = (sub.astype(np.float64).T @ sub) / max(sub.shape[0] - 1, 1)
+    lam, V = np.linalg.eigh(cov)                  # ascending
+    lam = np.maximum(lam[::-1], 1e-12)            # descending spectrum
+    V = V[:, ::-1]
+    std_id = np.sqrt(lam)
+    w = (std_id ** (1.0 - severity)) * (std_id[::-1] ** severity)
+    Z = rng.standard_normal((nq, X.shape[1]))
+    Q = mu + (Z * w) @ V.T
+    Q = Q.astype(np.float32)
+    Q *= (np.linalg.norm(X, axis=1).mean()
+          / max(np.linalg.norm(Q, axis=1).mean(), 1e-9))
+    return np.ascontiguousarray(Q, np.float32)
+
+
 def recall_at_k(found_ids: np.ndarray, gt_ids: np.ndarray) -> float:
     """Paper Eq. (1), averaged over queries."""
     k = gt_ids.shape[1]

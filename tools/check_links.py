@@ -1,0 +1,63 @@
+#!/usr/bin/env python
+"""Relative-link checker for the markdown doc tree.
+
+Usage: ``python tools/check_links.py [paths...]`` — each path is a markdown
+file or a directory to scan recursively (defaults to the repo's doc roots).
+Validates that every relative markdown link ``[text](target)`` resolves to
+an existing file or directory; external (``http(s)://``, ``mailto:``) and
+pure-anchor (``#...``) targets are skipped, anchors on relative targets are
+stripped.  Exits 1 listing every broken link, so the doc tree added in this
+repo (README.md, DESIGN.md, docs/, benchmarks/README.md) cannot rot
+silently.  Stdlib only — runs in CI without extra deps.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+DEFAULT_PATHS = ("README.md", "DESIGN.md", "ROADMAP.md", "docs", "benchmarks")
+
+
+def iter_markdown(paths):
+    """Yield every markdown file under the given files/directories."""
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            yield from sorted(path.rglob("*.md"))
+        elif path.suffix == ".md" and path.exists():
+            yield path
+
+
+def check_file(md: Path) -> list:
+    """Return (file, target) tuples for every broken relative link."""
+    broken = []
+    for target in LINK_RE.findall(md.read_text(encoding="utf-8")):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not (md.parent / rel).exists():
+            broken.append((md, target))
+    return broken
+
+
+def main(argv) -> int:
+    """CLI entrypoint; returns the process exit code."""
+    paths = argv or list(DEFAULT_PATHS)
+    files = list(iter_markdown(paths))
+    if not files:
+        print(f"check_links: no markdown files under {paths}", file=sys.stderr)
+        return 1
+    broken = [b for md in files for b in check_file(md)]
+    for md, target in broken:
+        print(f"{md}: broken relative link -> {target}", file=sys.stderr)
+    print(f"check_links: {len(files)} files, "
+          f"{len(broken)} broken links")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
