@@ -90,6 +90,16 @@ def run_queries(sess: SearchSession, ds, *, k=10, nprobe=16, nq=20,
     return res.qps, rec, res.stats, 1e6 * res.wall_time_s / len(Q)
 
 
+def latency_percentiles(samples_s) -> dict:
+    """Tail-latency summary of per-request latencies (seconds in, ms out):
+    ``{"p50_ms", "p95_ms", "p99_ms"}`` — the serving suite's headline shape."""
+    a = np.asarray(list(samples_s), np.float64)
+    if a.size == 0:
+        raise ValueError("latency_percentiles: empty sample")
+    return {f"p{p}_ms": float(1e3 * np.quantile(a, p / 100.0))
+            for p in (50, 95, 99)}
+
+
 def emit(name, us, **derived):
     d = "|".join(f"{k}={v}" for k, v in derived.items())
     print(f"{name},{us:.1f},{d}", flush=True)

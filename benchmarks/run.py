@@ -11,7 +11,7 @@ import time
 import traceback
 
 SUITES = ("query", "pruning", "ood", "metrics", "construction", "updates",
-          "hardware", "params", "stream", "adaptive")
+          "hardware", "params", "stream", "adaptive", "serving")
 
 
 def main() -> None:

@@ -15,3 +15,5 @@ from repro.api.session import (INDEX_KINDS, METHODS, SearchSession,  # noqa: F40
 from repro.api.types import (STAT_EXTRA_KEYS, SchedulePolicy,  # noqa: F401
                              SearchResult)
 from repro.core.engine import QueryBatch, ScanStats  # noqa: F401
+from repro.serving.search_service import (SearchRequest,  # noqa: F401
+                                          SearchService)

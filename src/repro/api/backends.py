@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.core.engine import (EXTRA_EST_SAVED_FLOPS, EXTRA_FALLBACK_BLOCKS,
                                EXTRA_RULE_TIMELINE, EXTRA_SCREEN_PASS_MEAN,
-                               EXTRA_SURVIVORS_MEAN,
+                               EXTRA_SURVIVORS_MEAN, EXTRA_UNCERTIFIED_MASK,
                                EXTRA_UNCERTIFIED_QUERIES, QueryBatch,
                                ScanStats, scan_topk)
 from repro.core.policy import PolicyConfig, finalize_adaptive_extra
@@ -41,6 +41,12 @@ class HostBackend:
     def invalidate(self):
         """No-op: nothing is cached on the host path."""
         pass
+
+    def notify_append(self, n_new: int, parts=None) -> str:
+        """Inserts need no layout work on the host path (the scan reads the
+        method's live numpy arrays); returns the write mode for telemetry
+        parity with the jax backend."""
+        return "noop"
 
     def search(self, Q, k: int, *, nprobe: int, ef: int):
         """Batched staged-scan top-k; returns (dists, ids, stats)."""
@@ -78,6 +84,7 @@ class HostBackend:
             stats.extra[EXTRA_SCREEN_PASS_MEAN] = completed / max(nq, 1)
         # every host survivor is exactly completed -> trivially certified
         stats.extra[EXTRA_UNCERTIFIED_QUERIES] = 0.0
+        stats.extra[EXTRA_UNCERTIFIED_MASK] = np.zeros(nq, bool)
         finalize_adaptive_extra(stats)
 
 
@@ -86,9 +93,14 @@ class JaxBackend:
     mesh-sharded).
 
     Lazily materializes the dimension-blocked device arrays from
-    ``method.device_state()`` and rebuilds them after ``invalidate()`` (the
-    session calls it on ``add``).  Query padding to the chunk size is handled
-    inside the engines, so ragged batches are fine.
+    ``method.device_state()`` and rebuilds them after ``invalidate()``.
+    Dynamic inserts take the LSM-style write path (DESIGN.md §6): the
+    session's ``add`` calls ``notify_append``, which keeps the cached main
+    block layout and serves the new rows from a small delta segment scanned
+    alongside it (one running tau across both segments), re-materializing
+    only once the delta exceeds ``SchedulePolicy.delta_merge_threshold``
+    rows.  Query padding to the chunk size is handled inside the engines, so
+    ragged batches are fine.
     """
 
     name = "jax"
@@ -121,14 +133,139 @@ class JaxBackend:
         self._cfg_cache: dict = {}  # k -> DcoEngineConfig (same object per
                                     # call so jit static-arg caching stays
                                     # on the identity fast path)
+        # ---- LSM-style delta segment (DESIGN.md §6) ----
+        self._n_main = 0            # rows in the materialized main layout
+        self._delta_parts = np.empty(0, np.int32)   # IVF parts of delta rows
+        self._delta_blocks = None   # cached combined main+delta layout
+        self._delta_tail_min = np.inf
+        self._delta_dirty = False
+        # write-path telemetry (bench_serving's insert amplification)
+        self.rows_inserted = 0      # rows arriving through notify_append
+        self.rows_written = 0       # rows laid out on device (full + delta)
+        self.merges = 0             # threshold-triggered re-materializations
 
     # -- state management ---------------------------------------------------
     def invalidate(self):
-        """Drop materialized device arrays (the session calls this on add)."""
+        """Drop materialized device arrays (full re-materialization on the
+        next search; ``notify_append`` is the cheaper delta path for adds)."""
         self._dstate = self._state = self._blocks = self._shard_args = None
         self._list_sizes = None
         self._mesh_fns.clear()
         self._cfg_cache.clear()
+        self._n_main = 0
+        self._delta_parts = np.empty(0, np.int32)
+        self._delta_blocks = None
+        self._delta_tail_min = np.inf
+        self._delta_dirty = False
+
+    def _resolved_engine(self) -> str:
+        """The engine ``search`` will actually run (opq / IVF probing / the
+        adaptive policy are stream-only); requires a materialized _dstate."""
+        if (self._dstate["kind"] == "opq" or self.index_kind == "ivf"
+                or PolicyConfig.from_schedule(self.policy) is not None):
+            return "stream"
+        return self.policy.engine
+
+    @property
+    def delta_rows(self) -> int:
+        """Rows currently served from the delta segment (0 when merged)."""
+        if self._dstate is None:
+            return 0
+        return int(self.method.state["N"]) - self._n_main
+
+    def notify_append(self, n_new: int, parts=None) -> str:
+        """Register ``n_new`` rows just appended to the method state.
+
+        Returns the write mode taken:
+          ``"delta"``    rows join the delta segment; the cached main block
+                         layout survives and the next search scans both
+                         segments under one running tau;
+          ``"merge"``    the delta exceeded ``delta_merge_threshold`` — the
+                         whole layout re-materializes on the next search;
+          ``"rebuild"``  delta path unavailable (mesh / two_stage engine /
+                         threshold 0): legacy full invalidation;
+          ``"cold"``     nothing was materialized yet, so the first search
+                         lays out everything at once anyway.
+        ``parts`` is the IVF partition assignment of the new rows (required
+        for index_kind='ivf'; IVFIndex.insert returns it)."""
+        self.rows_inserted += int(n_new)
+        if self._dstate is None:
+            self.invalidate()
+            return "cold"
+        thresh = self.policy.delta_merge_threshold
+        if self.mesh is not None or thresh <= 0 \
+                or self._resolved_engine() != "stream":
+            self.invalidate()
+            return "rebuild"
+        if self.index_kind == "ivf":
+            if parts is None:
+                raise ValueError("notify_append(index='ivf') needs the "
+                                 "partition assignment of the new rows")
+            self._delta_parts = np.concatenate(
+                [self._delta_parts, np.asarray(parts, np.int32)])
+        if self.delta_rows > thresh:
+            self.merges += 1
+            self.invalidate()
+            return "merge"
+        self._delta_dirty = True
+        return "delta"
+
+    def _build_delta(self):
+        """(Re)build the delta segment's blocks at the main layout's width
+        and concatenate them after the cached main blocks — the LSM write
+        path.  Host work is O(delta) (no transform recompute: methods keep
+        Xrot incrementally); the device-side concat copies the main blocks
+        (O(N) bandwidth) but never retraces or re-materializes them."""
+        import jax.numpy as jnp
+        from repro.core.stream_engine import append_stream_blocks
+
+        n_total = int(self.method.state["N"])
+        n_delta = n_total - self._n_main
+        ds = self.method.device_state()
+        if ds["kind"] != self._dstate["kind"]:
+            # the method was re-trained under us (kind flip, e.g. DDCopq
+            # lb->opq): the cached main layout is for the wrong rule
+            self.invalidate()
+            self._materialize()
+            return self._blocks
+        xr = np.asarray(ds["Xrot"], np.float32)[self._n_main:]
+        d1 = self._d1
+        # quantize the segment to whole blocks HOST-side (same pad rows the
+        # device build would add: zeros with id -1) so every delta size
+        # within the same block count shares one build/scan trace — without
+        # this, each insert changes the input shapes and retraces the jitted
+        # build, turning the first post-insert search into a compile stall
+        B = int(self._blocks["xl"].shape[1])
+        pad = -n_delta % B
+        self._delta_tail_min = float((xr[:, d1:] ** 2).sum(1).min())
+        row_ids = np.arange(self._n_main, n_total, dtype=np.int32)
+        parts = np.asarray(self._delta_parts, np.int32)
+        codes = (np.asarray(ds["codes"], np.int32)[self._n_main:]
+                 if ds["kind"] == "opq" else None)
+        if pad:
+            xr = np.concatenate([xr, np.zeros((pad, xr.shape[1]),
+                                              np.float32)])
+            row_ids = np.concatenate([row_ids, np.full(pad, -1, np.int32)])
+            if parts.size:      # edge-mode, as build_stream_blocks pads
+                parts = np.concatenate([parts, np.full(pad, parts[-1],
+                                                       np.int32)])
+            if codes is not None:
+                codes = np.concatenate(
+                    [codes, np.zeros((pad, codes.shape[1]), np.int32)])
+        dstate = {
+            "x_lead": xr[:, :d1], "x_tail": xr[:, d1:],
+            "lead_sq": (xr[:, :d1] ** 2).sum(1),
+            "tail_sq": (xr[:, d1:] ** 2).sum(1),
+            "row_ids": jnp.asarray(row_ids),
+        }
+        if self.index_kind == "ivf":
+            dstate["row_part"] = jnp.asarray(parts)
+        if codes is not None:
+            dstate["codes"] = jnp.asarray(codes)
+        self._delta_blocks = append_stream_blocks(self._blocks, dstate)
+        self._delta_dirty = False
+        self.rows_written += n_delta
+        return self._delta_blocks
 
     def _materialize(self):
         import jax.numpy as jnp
@@ -168,6 +305,8 @@ class JaxBackend:
             extra["codes"] = jnp.asarray(codes, jnp.int32)
         self._dstate = dstate
         self._d1 = min(self.policy.d1, D)
+        self._n_main = int(self.method.state["N"])
+        self.rows_written += self._n_main
         if self.mesh is None:
             self._state = build_device_state(dstate, self._d1)
             self._state.update(extra)
@@ -290,13 +429,30 @@ class JaxBackend:
                     # materialization, not per query batch
                     self._blocks = build_stream_blocks(self._state,
                                                        self.policy.row_block)
+                blocks, st = self._blocks, self._state
+                if self.delta_rows:
+                    if self._delta_dirty or self._delta_blocks is None:
+                        self._build_delta()
+                    blocks = self._delta_blocks
+                    # thread the combined tail-norm min so the ddcres screen
+                    # stays as loose as fitted (stream_engine tail_min)
+                    st = dict(self._state, tail_min=jnp.minimum(
+                        self._state["tail_sq"].min(),
+                        jnp.float32(self._delta_tail_min)))
                 probe = None
                 if self.index_kind == "ivf":
                     probed, cand_per_q = self._probe(Q, nprobe)
                     probe = jnp.asarray(probed)
+                    nd = self.delta_rows
+                    if nd:
+                        # delta rows are probe candidates too when their
+                        # partition was selected
+                        cand_per_q = cand_per_q + (
+                            self._delta_parts[None, :nd, None]
+                            == probed[:, None, :]).any(-1).sum(1)
                 out = stream_topk(
-                    self._state, jnp.asarray(ql), jnp.asarray(qt), cfg, qe,
-                    probe, blocks=self._blocks)
+                    st, jnp.asarray(ql), jnp.asarray(qt), cfg, qe,
+                    probe, blocks=blocks)
             # one batched transfer: the post-jit slices (and the adaptive
             # report) are tiny lazy dispatches — converting them one
             # np.asarray at a time serializes a sync per output
@@ -363,6 +519,7 @@ class JaxBackend:
             return
         fail = np.asarray(dmin) <= np.asarray(d)[:, -1]
         stats.extra[EXTRA_UNCERTIFIED_QUERIES] = float(fail.mean())
+        stats.extra[EXTRA_UNCERTIFIED_MASK] = fail
 
 
 def make_backend(name: str, method, index_kind: str, index, policy, *, mesh=None):

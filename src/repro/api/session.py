@@ -42,6 +42,7 @@ class SearchSession:
         self.policy = policy if policy is not None else SchedulePolicy()
         self.backend = make_backend(backend, method, index_kind, index,
                                     self.policy, mesh=mesh)
+        self.last_write_mode: str | None = None   # set by add()
 
     # -- introspection -------------------------------------------------------
     @property
@@ -70,8 +71,25 @@ class SearchSession:
 
     def add(self, Xnew) -> "SearchSession":
         """Dynamic inserts (paper §V-E): extend the fitted method state
-        without refitting transforms, then link/assign into the index."""
-        Xnew = np.atleast_2d(np.asarray(Xnew, np.float32))
+        without refitting transforms, then link/assign into the index.
+
+        On the jax backend inserts below ``policy.delta_merge_threshold``
+        rows land in a delta segment scanned alongside the cached main block
+        layout (no re-materialization; DESIGN.md §6); the last write mode
+        taken is readable as ``session.last_write_mode``."""
+        Xnew = np.atleast_2d(np.asarray(Xnew))
+        if Xnew.dtype.kind not in "fiu":
+            raise ValueError(
+                f"add(): expected a numeric array, got dtype {Xnew.dtype}")
+        if Xnew.ndim != 2:
+            raise ValueError(
+                f"add(): expected (n, D) vectors, got shape {Xnew.shape}")
+        if Xnew.shape[1] != self.dim:
+            raise ValueError(
+                f"add(): vectors have dimension {Xnew.shape[1]}, but this "
+                f"index was built with D={self.dim}")
+        Xnew = np.ascontiguousarray(Xnew, np.float32)
+        parts = None
         if self.index_kind == "hnsw":
             # insert_batch appends to the method itself, then links
             self.index.insert_batch(self.method, Xnew,
@@ -80,9 +98,18 @@ class SearchSession:
             start = self.n
             self.method.append(Xnew)
             if self.index_kind == "ivf":
-                self.index.insert(np.arange(start, start + Xnew.shape[0]), Xnew)
-        self.backend.invalidate()
+                parts = self.index.insert(
+                    np.arange(start, start + Xnew.shape[0]), Xnew)
+        self.last_write_mode = self.backend.notify_append(
+            Xnew.shape[0], parts=parts)
         return self
+
+    def serve(self, **kwargs) -> "SearchService":
+        """Wrap this session in a continuous-batching serving front
+        (``repro.serving.SearchService``); kwargs are its knobs
+        (slots/k/nprobe/...)."""
+        from repro.serving.search_service import SearchService
+        return SearchService(self, **kwargs)
 
     # -- persistence ---------------------------------------------------------
     def save(self, path) -> None:
@@ -102,14 +129,17 @@ def open_index(X, *, index: str = "flat", method: str = "DADE",
                method_params: dict | None = None,
                index_params: dict | None = None,
                train_queries=None, train_k: int = 10,
-               seed: int = 0, mesh=None) -> SearchSession:
+               seed: int = 0, mesh=None, serving: bool = False,
+               serving_params: dict | None = None):
     """Fit ``method`` on ``X``, build ``index``, and return a ready session.
 
     ``method`` is one of the paper's 8 (``repro.api.METHODS``); training-based
     methods (DDCpca/DDCopq) are trained on ``train_queries`` (default: a
     sample of X rows) for ``k=train_k``.  ``schedule`` tunes staging on both
     backends; ``mesh`` (jax backend only) shards the corpus for a distributed
-    global top-k.
+    global top-k.  ``serving=True`` wraps the session in a continuous-
+    batching ``repro.serving.SearchService`` (``serving_params`` are its
+    knobs) and returns that instead.
     """
     X = np.ascontiguousarray(np.atleast_2d(X), np.float32)
     policy = schedule if schedule is not None else SchedulePolicy()
@@ -145,4 +175,7 @@ def open_index(X, *, index: str = "flat", method: str = "DADE",
                                         schedule=policy.stage_dims(X.shape[1]))
     else:
         raise ValueError(f"index must be one of {INDEX_KINDS}, got {index!r}")
-    return SearchSession(m, index, idx, backend, policy, mesh=mesh)
+    sess = SearchSession(m, index, idx, backend, policy, mesh=mesh)
+    if serving:
+        return sess.serve(**(serving_params or {}))
+    return sess

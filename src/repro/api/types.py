@@ -7,7 +7,7 @@ import numpy as np
 
 from repro.core.engine import (EXTRA_EST_SAVED_FLOPS, EXTRA_FALLBACK_BLOCKS,
                                EXTRA_RULE_TIMELINE, EXTRA_SCREEN_PASS_MEAN,
-                               EXTRA_SURVIVORS_MEAN,
+                               EXTRA_SURVIVORS_MEAN, EXTRA_UNCERTIFIED_MASK,
                                EXTRA_UNCERTIFIED_QUERIES, ScanStats,
                                make_schedule)
 
@@ -43,6 +43,12 @@ STAT_EXTRA_KEYS: dict = {
         "Adaptive policy only: per block index, the fraction of the batch "
         "(query chunks on jax, queries on host) served by the fallback — "
         "the scan-time story of which rule was active when.",
+    EXTRA_UNCERTIFIED_MASK:
+        "Per-query bool array: row i is True iff query i's exactness "
+        "certificate failed (the per-query view of uncertified_queries; "
+        "serving.SearchService threads it into per-request results).  All "
+        "False on the host path; absent on the legacy two_stage engine, "
+        "which has no per-block certificate.",
 }
 
 
@@ -62,6 +68,13 @@ class SchedulePolicy:
     survivors tail-completed per block per query (must comfortably exceed k;
     the per-block analogue of ``capacity``), ``use_kernel`` routes stage 1
     through the Pallas kernels (None = only on TPU).  See DESIGN.md §4.
+
+    ``delta_merge_threshold`` governs the jax backend's LSM-style write path
+    (DESIGN.md §6): ``add()`` appends rows to a small delta segment that is
+    scanned alongside the cached main block layout (same running tau), and
+    the main layout is only re-materialized (a "merge") once the delta holds
+    more than this many rows.  0 disables the delta path entirely — every
+    insert re-materializes, the pre-PR-6 behavior.
 
     ``adaptive=True`` arms the adaptive DCO policy (DESIGN.md §5): the
     engines watch per-block survivor fractions and degrade the configured
@@ -86,6 +99,7 @@ class SchedulePolicy:
     use_kernel: bool | None = None
     adaptive: bool = False
     fallback_margin: float = 1.5
+    delta_merge_threshold: int = 4096
 
     def stage_dims(self, D: int) -> list:
         """Host screening stage dims for dimensionality ``D`` (the paper's

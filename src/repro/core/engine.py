@@ -27,6 +27,7 @@ EXTRA_UNCERTIFIED_QUERIES = "uncertified_queries"  # frac with failed certificat
 EXTRA_FALLBACK_BLOCKS = "fallback_blocks"        # adaptive: fdscan blocks / query
 EXTRA_EST_SAVED_FLOPS = "est_saved_flops"        # adaptive: saved vs fdscan, batch
 EXTRA_RULE_TIMELINE = "rule_timeline"            # adaptive: fallback frac / block
+EXTRA_UNCERTIFIED_MASK = "uncertified_mask"      # per-query certificate failures
 
 
 def make_schedule(D: int, delta0: int = 32, delta_d: int = 64, max_stages: int = 4):

@@ -95,17 +95,22 @@ def _merge_topk(best_d, best_i, new_d, new_i, k: int):
     return -neg, jnp.take_along_axis(i, pos, axis=1)
 
 
-@functools.partial(jax.jit, static_argnames=("row_block",))
-def build_stream_blocks(state: dict, row_block: int) -> dict:
+@functools.partial(jax.jit, static_argnames=("row_block", "full_width"))
+def build_stream_blocks(state: dict, row_block: int,
+                        full_width: bool = False) -> dict:
     """Pad the corpus to a whole number of row blocks and reshape every
     per-row array to (n_blocks, block, ...).  Pad rows carry id -1.  The
     layout depends only on the device state and ``row_block``, so callers
     that search repeatedly (api.backends.JaxBackend) build it ONCE per
     materialization instead of paying a full-corpus pad copy per query
-    batch (N % row_block != 0 makes ``jnp.pad`` a real O(N*D) copy)."""
+    batch (N % row_block != 0 makes ``jnp.pad`` a real O(N*D) copy).
+
+    ``full_width=True`` keeps the block width at ``row_block`` even when the
+    segment has fewer rows — required for a delta segment whose blocks are
+    concatenated after a main layout of that width (append_stream_blocks)."""
     x_lead = state["x_lead"]
     n = x_lead.shape[0]
-    B = min(row_block, n)
+    B = row_block if full_width else min(row_block, n)
     nb = -(-n // B)
     pad = nb * B - n
 
@@ -128,6 +133,25 @@ def build_stream_blocks(state: dict, row_block: int) -> dict:
     if "codes" in state:        # PQ codes for the opq rule
         xs["codes"] = rows(state["codes"].astype(jnp.int32))
     return xs
+
+
+def append_stream_blocks(main: dict, delta_state: dict) -> dict:
+    """Concatenate a small delta segment's blocks after a main layout.
+
+    The delta layout is built at the MAIN block width (``full_width=True``),
+    so the combined pytree is one (nb_main + nb_delta, B, ...) stack the
+    engine's ``lax.scan`` walks end to end — the running tau tightened over
+    the main segment carries straight into the delta blocks (and vice versa
+    on later batches), which is what makes the LSM-style write path free of
+    any cross-segment merge step at query time.  ``delta_state`` must carry
+    ``row_ids`` (global ids of the appended rows) and the same optional keys
+    (``row_part``, ``codes``) as the main layout."""
+    B = main["xl"].shape[1]
+    delta = build_stream_blocks(delta_state, B, full_width=True)
+    missing = set(main) ^ set(delta)
+    if missing:
+        raise ValueError(f"delta segment layout keys differ from main: {missing}")
+    return {key: jnp.concatenate([main[key], delta[key]]) for key in main}
 
 
 def _adaptive(cfg: DcoEngineConfig) -> bool:
@@ -173,7 +197,10 @@ def _scan_blocks(cfg: DcoEngineConfig, state, xs, ql, qt, qe, pr, B, D,
     qt_sq = (qt ** 2).sum(1)
     if cfg.kind == "ddcres":
         slack = 2.0 * cfg.m * jnp.sqrt(jnp.maximum(qe["var_d1"], 0.0))
-        tail_min = state["tail_sq"].min()
+        # a delta segment (api.backends) may carry rows with a smaller tail
+        # norm than any main row; the backend threads the combined min as a
+        # scalar so the Eq. 7 partial screen stays as loose as fitted
+        tail_min = state.get("tail_min", state["tail_sq"]).min()
 
     Cp = min(C + 1, B)      # +1 slot observes the best DROPPED estimate
 

@@ -70,14 +70,17 @@ class IVFIndex:
         return self
 
     def insert(self, new_ids: np.ndarray, Xnew: np.ndarray,
-               *, method=None, schedule=None):
+               *, method=None, schedule=None) -> np.ndarray:
         """Dynamic inserts (paper §V-E): assign new vectors to partitions;
-        DCO screening accelerates the assignment."""
+        DCO screening accelerates the assignment.  Returns the per-row
+        partition assignment (the jax backend's delta segment needs it to
+        probe delta rows without re-deriving the layout)."""
         a = _kmeans_assign(np.asarray(Xnew, np.float32), self.centroids,
                            method=method, schedule=schedule)
         for j, gid in zip(a, new_ids):
             self.lists[j] = np.append(self.lists[j], gid)
         self.n += len(new_ids)
+        return a
 
     # -- search ---------------------------------------------------------------
     def probe_ids(self, q: np.ndarray, nprobe: int) -> np.ndarray:

@@ -1,1 +1,10 @@
+"""``repro.serving`` — serving fronts.
+
+``ServingEngine`` is the continuous-batching loop for LM decode;
+``SearchService`` applies the same fixed-slot pattern to vector search
+(batched single-query admission + the LSM-style delta write path,
+DESIGN.md §6).
+"""
 from repro.serving.engine import ServingEngine  # noqa: F401
+from repro.serving.search_service import (SearchRequest,  # noqa: F401
+                                          SearchService)

@@ -9,6 +9,7 @@ per-slot cache, page tables noted as an extension in DESIGN.md).
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
 
 import jax
@@ -40,7 +41,7 @@ class ServingEngine:
         sample greedily.  Idle slots replay position 1 harmlessly.
         """
         cfg = self.api.cfg
-        queue = list(requests)
+        queue = deque(requests)      # popleft admission is O(1), not O(n)
         cache = self.api.init_cache(self.slots, self.max_len)
         lens = np.zeros(self.slots, np.int64)          # tokens already in cache
         cur_tok = np.zeros(self.slots, np.int64)
@@ -49,7 +50,7 @@ class ServingEngine:
         for _ in range(max_steps):
             for s in range(self.slots):
                 if slot_req[s] is None and queue:
-                    req = queue.pop(0)
+                    req = queue.popleft()
                     slot_req[s] = req
                     lens[s] = 0
                     req.cursor = 0

@@ -1,0 +1,185 @@
+"""Continuous-batching serving front over a ``SearchSession``.
+
+``SearchSession.search`` is a synchronous full-batch call — fine for the
+paper's figures, wrong for serving, where queries arrive one at a time and
+tail latency is the contract.  ``SearchService`` closes that gap with the
+same slot pattern ``serving/engine.py`` proved for LM decode: arriving
+single queries enqueue (O(1) deque admission) and each ``step()`` packs up
+to ``slots`` of them into ONE fixed-shape device batch — the batch is always
+padded to exactly ``slots`` rows, so the jitted search graph compiles once
+and every later step hits the jit cache no matter how many requests are
+waiting.  Under load, requests that arrive while a batch is in flight are
+served together in the next step: the continuous-batching dynamic that
+trades a little per-request latency for sustained throughput.
+
+Writes ride the LSM-style delta path (DESIGN.md §6): ``add()`` appends to
+the session, whose jax backend keeps its cached main block layout and scans
+the new rows from a small delta segment under the same running tau —
+inserts no longer re-materialize the corpus, so a mixed read/write workload
+keeps serving between merges.
+
+Each completed request carries its own ids/dists, the per-query exactness
+certificate (``certified``; from the streaming engine's dropped-estimate
+bound, DESIGN.md §4), and the batch's policy stats, so a caller can retry
+or degrade per request instead of per batch.
+
+Timing is injectable: by default ``submit``/``step`` stamp
+``time.perf_counter()``, but both accept an explicit ``now`` so a
+discrete-event driver (benchmarks/bench_serving.py) can replay Poisson
+arrivals against measured service times without sleeping through the
+arrival process.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.engine import EXTRA_UNCERTIFIED_MASK
+
+
+@dataclass
+class SearchRequest:
+    """One in-flight (then completed) query and its per-request telemetry."""
+
+    rid: int
+    q: np.ndarray                  # (D,) float32
+    t_submit: float
+    t_done: float | None = None
+    service_s: float | None = None   # wall time of the batch that served it
+    batch_size: int = 0              # real (non-pad) requests in that batch
+    n_visible: int = 0               # corpus rows visible when served
+    ids: np.ndarray | None = None    # (k,) int64
+    dists: np.ndarray | None = None  # (k,) float32
+    certified: bool | None = None    # per-query exactness certificate
+    stats: dict = field(default_factory=dict)   # batch-level policy stats
+
+    @property
+    def done(self) -> bool:
+        """True once a step has served this request."""
+        return self.t_done is not None
+
+    @property
+    def latency_s(self) -> float:
+        """Submit-to-completion latency (queueing + service)."""
+        if self.t_done is None:
+            raise ValueError(f"request {self.rid} is still pending")
+        return self.t_done - self.t_submit
+
+
+class SearchService:
+    """Continuous-batching query front: ``submit()`` -> ``step()``/``drain()``.
+
+    ``slots`` is the fixed device batch width (pad-to-``slots`` keeps the
+    jitted graph static; make it a multiple of the session's
+    ``policy.query_chunk`` so one step is a whole number of engine chunks).
+    ``k``/``nprobe`` are fixed per service so result shapes stay static too.
+    """
+
+    def __init__(self, session, *, slots: int = 16, k: int = 10,
+                 nprobe: int = 16, clock=time.perf_counter):
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
+        self.session = session
+        self.slots = slots
+        self.k = k
+        self.nprobe = nprobe
+        self._clock = clock
+        self._queue: deque[SearchRequest] = deque()
+        self._next_rid = 0
+        # service-level counters (bench_serving's headline inputs)
+        self.completed = 0
+        self.steps = 0
+        self.busy_s = 0.0            # wall time spent inside search calls
+        self.rows_inserted = 0
+        self.insert_s = 0.0          # wall time spent inside add calls
+        self.write_modes: dict = {}  # mode -> count (delta/merge/rebuild/...)
+
+    # -- admission -----------------------------------------------------------
+    @property
+    def pending(self) -> int:
+        """Requests admitted but not yet served."""
+        return len(self._queue)
+
+    def submit(self, q, *, now: float | None = None) -> SearchRequest:
+        """Enqueue one query; returns its (pending) request ticket."""
+        q = np.asarray(q, np.float32).reshape(-1)
+        if q.shape[0] != self.session.dim:
+            raise ValueError(
+                f"submit(): query has dimension {q.shape[0]}, but the index "
+                f"was built with D={self.session.dim}")
+        req = SearchRequest(rid=self._next_rid, q=q,
+                            t_submit=self._clock() if now is None else now)
+        self._next_rid += 1
+        self._queue.append(req)
+        return req
+
+    def add(self, Xnew, *, now: float | None = None) -> dict:
+        """Insert rows through the session's delta write path; returns
+        ``{"rows", "mode", "wall_s"}`` (mode per backends.notify_append)."""
+        t0 = time.perf_counter()
+        self.session.add(Xnew)
+        wall = time.perf_counter() - t0
+        mode = self.session.last_write_mode
+        rows = int(np.atleast_2d(Xnew).shape[0])
+        self.rows_inserted += rows
+        self.insert_s += wall
+        self.write_modes[mode] = self.write_modes.get(mode, 0) + 1
+        return {"rows": rows, "mode": mode, "wall_s": wall}
+
+    # -- serving -------------------------------------------------------------
+    def step(self, *, now: float | None = None) -> list[SearchRequest]:
+        """Serve ONE fixed-shape batch: pop up to ``slots`` queued requests,
+        pad to exactly ``slots`` queries, run one session search, and fill
+        each served request (ids/dists/certificate/stats + timestamps).
+
+        With ``now`` given (simulated time), completions are stamped
+        ``now + measured_service_wall``; otherwise the real clock is used.
+        Returns the served requests ([] when the queue was empty)."""
+        if not self._queue:
+            return []
+        batch = [self._queue.popleft()
+                 for _ in range(min(self.slots, len(self._queue)))]
+        Q = np.stack([r.q for r in batch])
+        if len(batch) < self.slots:
+            # pad with a replay of the last real query: static (slots, D)
+            # shape -> the jitted graph compiles once for the service
+            Q = np.concatenate(
+                [Q, np.broadcast_to(Q[-1], (self.slots - len(batch),
+                                            Q.shape[1]))])
+        t0 = time.perf_counter()
+        res = self.session.search(Q, self.k, nprobe=self.nprobe)
+        wall = time.perf_counter() - t0
+        t_done = (now + wall) if now is not None else self._clock()
+        mask = res.stats.extra.get(EXTRA_UNCERTIFIED_MASK)
+        stats = {key: v for key, v in res.stats.extra.items()
+                 if np.isscalar(v)}
+        n_visible = self.session.n
+        for j, req in enumerate(batch):
+            req.ids = res.ids[j]
+            req.dists = res.dists[j]
+            req.certified = None if mask is None else bool(~mask[j])
+            req.stats = stats
+            req.t_done = t_done
+            req.service_s = wall
+            req.batch_size = len(batch)
+            req.n_visible = n_visible
+        self.steps += 1
+        self.completed += len(batch)
+        self.busy_s += wall
+        return batch
+
+    def drain(self, *, now: float | None = None) -> list[SearchRequest]:
+        """Serve until the queue is empty; in simulated time consecutive
+        batches complete back-to-back (each step starts when the previous
+        finished).  Returns all served requests in completion order."""
+        served: list[SearchRequest] = []
+        t = now
+        while self._queue:
+            batch = self.step(now=t)
+            if t is not None and batch:
+                t = batch[0].t_done
+            served.extend(batch)
+        return served

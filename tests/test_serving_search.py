@@ -1,0 +1,229 @@
+"""Serving front + LSM delta write path (PR 6).
+
+Parity convention: the delta layout must answer exactly like a merged
+layout over the same fitted state, so every comparison reuses the SAME
+method object (a freshly ``open_index``-ed session would refit transforms
+on the grown corpus and legitimately differ).  Certified configurations
+only (adaptive policy, or block_capacity == row_block): the streaming
+certificate guarantees exact answers there, making ids comparable bit-wise.
+"""
+import numpy as np
+import pytest
+
+from repro.api import SchedulePolicy, SearchSession, open_index
+from repro.core.engine import EXTRA_UNCERTIFIED_MASK
+
+
+def _data(n=1536, d=48, nq=12, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.normal(size=(n, d)).astype(np.float32),
+            rng.normal(size=(nq, d)).astype(np.float32))
+
+
+def _pol(**kw):
+    kw.setdefault("d1", 24)
+    kw.setdefault("query_chunk", 4)
+    kw.setdefault("row_block", 256)
+    kw.setdefault("block_capacity", 256)
+    return SchedulePolicy(**kw)
+
+
+# ---------------------------------------------------------------- add() ----
+def test_add_validates_dimension_and_dtype():
+    X, _ = _data()
+    sess = open_index(X, index="flat", method="PDScanning", backend="host")
+    with pytest.raises(ValueError, match="dimension 47"):
+        sess.add(np.zeros((3, 47), np.float32))
+    with pytest.raises(ValueError, match="numeric"):
+        sess.add(np.array([["a"] * X.shape[1]]))
+    with pytest.raises(ValueError, match="shape"):
+        sess.add(np.zeros((2, 3, X.shape[1]), np.float32))
+    sess.add(np.zeros((2, X.shape[1]), np.float64))   # numeric casts are fine
+    assert sess.n == X.shape[0] + 2
+
+
+# ------------------------------------------------- flat delta segment ------
+@pytest.mark.parametrize("policy_kw", [{}, {"adaptive": True}])
+def test_flat_delta_matches_merged_layout(policy_kw):
+    X, Q = _data()
+    pol = _pol(**policy_kw)
+    sess = open_index(X[:1200], index="flat", method="PDScanning+",
+                      backend="jax", schedule=pol)
+    sess.search(Q, 10)
+    n_main0 = sess.backend._n_main
+    written0 = sess.backend.rows_written
+    sess.add(X[1200:])
+    assert sess.last_write_mode == "delta"
+    rd = sess.search(Q, 10)
+    # the acceptance regression: an insert below the merge threshold must
+    # NOT re-materialize the main layout — only the delta rows are written
+    assert sess.backend._n_main == n_main0
+    assert sess.backend.merges == 0
+    assert sess.backend.rows_written == written0 + (X.shape[0] - 1200)
+    assert sess.backend.delta_rows == X.shape[0] - 1200
+    merged = SearchSession(sess.method, "flat", None, "jax", pol)
+    rm = merged.search(Q, 10)
+    np.testing.assert_array_equal(rd.ids, rm.ids)
+    np.testing.assert_allclose(rd.dists, rm.dists, rtol=1e-5, atol=1e-5)
+    # certified exact: the delta scan keeps the per-query certificate
+    assert not rd.stats.extra[EXTRA_UNCERTIFIED_MASK].any()
+
+
+def test_flat_delta_matches_host_backend():
+    X, Q = _data()
+    pol = _pol(adaptive=True)
+    sess = open_index(X[:1200], index="flat", method="DADE",
+                      backend="jax", schedule=pol)
+    sess.add(X[1200:])
+    rj = sess.search(Q, 10)
+    host = SearchSession(sess.method, "flat", None, "host", pol)
+    rh = host.search(Q, 10)
+    np.testing.assert_array_equal(rj.ids, rh.ids)
+
+
+def test_repeated_adds_accumulate_in_delta():
+    X, Q = _data()
+    sess = open_index(X[:1200], index="flat", method="PDScanning+",
+                      backend="jax", schedule=_pol())
+    sess.search(Q, 5)
+    for lo in range(1200, X.shape[0], 112):
+        sess.add(X[lo:lo + 112])
+        assert sess.last_write_mode == "delta"
+    rd = sess.search(Q, 5)
+    rm = SearchSession(sess.method, "flat", None, "jax", _pol()).search(Q, 5)
+    np.testing.assert_array_equal(rd.ids, rm.ids)
+
+
+# --------------------------------------------------------- IVF delta -------
+def test_ivf_delta_matches_host_backend():
+    X, Q = _data()
+    pol = _pol(adaptive=True)
+    sess = open_index(X[:1200], index="ivf", method="PDScanning+",
+                      backend="jax", schedule=pol,
+                      index_params={"n_list": 16})
+    sess.search(Q, 10, nprobe=16)                 # warm the main layout
+    n_main0 = sess.backend._n_main
+    sess.add(X[1200:])
+    assert sess.last_write_mode == "delta"
+    rj = sess.search(Q, 10, nprobe=16)            # nprobe = n_list: exact
+    assert sess.backend._n_main == n_main0
+    host = SearchSession(sess.method, "ivf", sess.index, "host", pol)
+    rh = host.search(Q, 10, nprobe=16)
+    np.testing.assert_array_equal(rj.ids, rh.ids)
+    np.testing.assert_allclose(rj.dists, rh.dists, rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------- merge policy ------
+def test_merge_threshold_triggers_rematerialization():
+    X, Q = _data()
+    pol = _pol(delta_merge_threshold=200)
+    sess = open_index(X[:1200], index="flat", method="PDScanning+",
+                      backend="jax", schedule=pol)
+    sess.search(Q, 10)
+    sess.add(X[1200:1350])
+    assert sess.last_write_mode == "delta"
+    sess.add(X[1350:])                            # delta would exceed 200
+    assert sess.last_write_mode == "merge"
+    assert sess.backend.merges == 1
+    rd = sess.search(Q, 10)
+    assert sess.backend._n_main == X.shape[0]     # fully merged
+    assert sess.backend.delta_rows == 0
+    rm = SearchSession(sess.method, "flat", None, "jax", pol).search(Q, 10)
+    np.testing.assert_array_equal(rd.ids, rm.ids)
+
+
+def test_zero_threshold_disables_delta_path():
+    X, Q = _data()
+    pol = _pol(delta_merge_threshold=0)
+    sess = open_index(X[:1200], index="flat", method="PDScanning+",
+                      backend="jax", schedule=pol)
+    sess.search(Q, 10)
+    sess.add(X[1200:])
+    assert sess.last_write_mode == "rebuild"      # pre-PR-6 behavior
+    sess.search(Q, 10)
+    assert sess.backend._n_main == X.shape[0]
+
+
+# -------------------------------------------------------- persistence ------
+def test_save_load_with_nonempty_delta(tmp_path):
+    X, Q = _data()
+    sess = open_index(X[:1200], index="flat", method="PDScanning+",
+                      backend="jax", schedule=_pol())
+    sess.search(Q, 10)
+    sess.add(X[1200:])
+    assert sess.backend.delta_rows > 0
+    before = sess.search(Q, 10)
+    sess.save(tmp_path / "idx.bin")
+    loaded = SearchSession.load(tmp_path / "idx.bin", backend="jax")
+    after = loaded.search(Q, 10)
+    assert loaded.n == X.shape[0]
+    np.testing.assert_array_equal(before.ids, after.ids)
+
+
+# ------------------------------------------------------ SearchService ------
+def test_service_batches_match_batched_search():
+    X, Q = _data(nq=11)                           # < slots and > slots below
+    sess = open_index(X, index="flat", method="PDScanning+",
+                      backend="jax", schedule=_pol(adaptive=True))
+    svc = sess.serve(slots=4, k=10)
+    reqs = [svc.submit(q) for q in Q]
+    assert svc.pending == len(Q)
+    served = svc.drain()
+    assert svc.pending == 0 and len(served) == len(Q)
+    ref = sess.search(Q, 10)
+    for i, r in enumerate(reqs):
+        assert r.done and r.latency_s >= 0.0
+        assert r.certified is True                # adaptive => certified
+        assert r.batch_size <= 4 and r.n_visible == X.shape[0]
+        np.testing.assert_array_equal(r.ids, ref.ids[i])
+
+
+def test_service_rejects_bad_dimension_and_empty_step():
+    X, _ = _data()
+    svc = open_index(X, index="flat", method="PDScanning", backend="host",
+                     serving=True, serving_params={"slots": 2, "k": 5})
+    assert svc.step() == []
+    with pytest.raises(ValueError, match="dimension"):
+        svc.submit(np.zeros(7, np.float32))
+
+
+def test_service_interleaved_add_becomes_visible():
+    X, Q = _data()
+    sess = open_index(X[:1400], index="flat", method="PDScanning+",
+                      backend="jax", schedule=_pol(adaptive=True))
+    svc = sess.serve(slots=4, k=5)
+    svc.submit(Q[0])
+    first = svc.drain()[0]
+    assert first.n_visible == 1400
+    probe = X[1400]                               # insert, then query it
+    info = svc.add(X[1400:])
+    assert info["rows"] == X.shape[0] - 1400 and info["mode"] == "delta"
+    svc.submit(probe)
+    req = svc.drain()[0]
+    assert req.n_visible == X.shape[0]
+    assert req.ids[0] == 1400                     # its own row wins top-1
+    assert req.dists[0] <= 1e-4
+
+
+def test_service_simulated_time_stamps():
+    X, Q = _data()
+    svc = open_index(X, index="flat", method="PDScanning", backend="host",
+                     serving=True, serving_params={"slots": 4, "k": 5})
+    r0 = svc.submit(Q[0], now=10.0)
+    r1 = svc.submit(Q[1], now=10.5)
+    served = svc.drain(now=11.0)
+    assert [r.rid for r in served] == [r0.rid, r1.rid]
+    assert r0.t_submit == 10.0 and r1.t_submit == 10.5
+    assert r0.t_done == pytest.approx(11.0 + r0.service_s)
+    assert r0.latency_s > r1.latency_s            # same batch, earlier submit
+
+
+# ------------------------------------------------------------ helpers ------
+def test_latency_percentiles_shape():
+    from benchmarks.common import latency_percentiles
+    p = latency_percentiles(np.linspace(0.001, 0.1, 100))
+    assert set(p) == {"p50_ms", "p95_ms", "p99_ms"}
+    assert p["p50_ms"] <= p["p95_ms"] <= p["p99_ms"]
+    assert p["p99_ms"] == pytest.approx(99.01, abs=0.5)
+    with pytest.raises(ValueError):
+        latency_percentiles([])
