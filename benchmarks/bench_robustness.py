@@ -1,0 +1,246 @@
+"""Serving robustness under Poisson bursts at 1x/2x/4x capacity.
+
+The §7 question: when offered load exceeds what the device can serve, does
+the service degrade *predictably* — bounded queue, bounded accepted-request
+tail latency, every ticket resolved — instead of collapsing into an
+unbounded backlog?  And when a request's budget forces a partial scan, how
+much of the corpus did it actually see and what recall did that buy?
+
+Method: calibrate the full-batch service wall on a throwaway session, then
+replay the SAME Poisson arrival sequence (discrete-event, measured walls —
+the bench_serving pattern) at 1x, 2x, and 4x the calibrated capacity
+against a bounded-queue ``SearchService`` with per-request deadlines.
+Sheds, timeouts, partials, and failures are all legitimate outcomes; the
+accounting invariant (``submitted == completed + shed + timeouts +
+failures``) must hold exactly at every rate.
+
+Per rate: shed/timeout/partial rates, the coverage distribution of served
+requests (anytime scans report the scanned-block fraction), recall of
+served requests vs the full-corpus oracle ("recall under deadline"), and
+accepted-request p50/p95/p99.  The 4x acceptance: accepted p99 stays under
+a structural bound derived from the queue depth (max wait ≈
+ceil(max_queue/slots)+1 batches + own service), not from luck.
+
+Writes BENCH_robustness.json; ``--dryrun`` is the CI smoke (tiny corpus,
+one overloaded rate, slow-block fault injection to force deadline expiry
+deterministically, no JSON).
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import json
+
+import numpy as np
+
+from benchmarks.common import (dataset, emit, fmt3, latency_percentiles,
+                               shared_pca)
+from repro.api import SchedulePolicy, SearchSession
+from repro.core.methods import make_method
+from repro.testing import faults
+from repro.vecdata import load_dataset
+
+K, SLOTS = 10, 16
+NQ_POOL = 64
+MAX_QUEUE = 2 * SLOTS
+RATES = (1.0, 2.0, 4.0)       # offered rate as a multiple of capacity
+SEED = 23
+
+
+def _build_session(X, pca, *, d1, row_block=4096, block_group=2):
+    # anytime deadlines run the fixed streaming scan (the backend strips
+    # the adaptive policy for deadline calls); a small block_group gives
+    # the deadline mid-scan checkpoints even on a small corpus
+    pol = SchedulePolicy(d1=d1, query_chunk=SLOTS, row_block=row_block,
+                         anytime_block_group=block_group)
+    m = make_method("PDScanning+", pca=pca).fit(X)
+    return SearchSession(m, "flat", None, "jax", pol)
+
+
+def _calibrate(svc, pool) -> float:
+    """Steady full-batch service wall (seconds), after jit warm-up.
+
+    Calibrated WITH a (generous) deadline so the measured wall is the
+    grouped anytime scan the replay actually serves — the one-shot
+    non-deadline path is faster (no per-group host syncs) and calibrating
+    on it would make every replay rate an unintended overload."""
+    for _ in range(2):
+        for j in range(SLOTS):
+            svc.submit(pool[j % len(pool)], deadline_s=1e3)
+        svc.drain()
+    steady = np.inf
+    for _ in range(3):
+        for j in range(SLOTS):
+            svc.submit(pool[j % len(pool)], deadline_s=1e3)
+        steady = min(steady, svc.step()[0].service_s)
+        svc.drain()
+    return steady
+
+
+def _replay(svc, pool, qidx, arrivals):
+    """Discrete-event replay: submit at the recorded arrival instants,
+    serve with measured walls.  Returns every ticket, in submit order."""
+    tickets, t, i = [], 0.0, 0
+    while i < len(arrivals) or svc.pending:
+        while i < len(arrivals) and arrivals[i] <= t:
+            tickets.append(svc.submit(pool[qidx[i]], now=arrivals[i]))
+            i += 1
+        out = svc.step(now=t)
+        if out:
+            t = max(r.t_done for r in out)
+        elif i < len(arrivals):
+            t = max(t, arrivals[i])
+        else:
+            break
+    svc.drain(now=t)
+    return tickets
+
+
+def _rate_row(sess, pool, qidx, arrivals, oracle, deadline_s, steady_s):
+    svc = sess.serve(slots=SLOTS, k=K, nprobe=16, max_queue=MAX_QUEUE,
+                     admission="shed_oldest", deadline_s=deadline_s)
+    for j in range(SLOTS):                    # re-warm this service's jit on
+        svc.submit(pool[j % len(pool)],       # the anytime path, full scan
+                   deadline_s=1e3)
+    svc.drain()
+    warm = svc.health()
+    tickets = _replay(svc, pool, qidx, arrivals)
+    h = svc.health()
+    done = [r for r in tickets if r.done]
+    lat = [r.latency_s for r in done]
+    cov = np.array([1.0 if r.coverage is None else r.coverage
+                    for r in done], np.float64)
+    recalls = [np.isin(r.ids[:K], oracle[qidx_of]).mean()
+               for r, qidx_of in zip(tickets, qidx) if r.done]
+    n = len(tickets)
+    row = {
+        "n_requests": n,
+        "served": len(done),
+        "shed_rate": (h["shed"] - warm["shed"]) / n,
+        "timeout_rate": (h["timeouts"] - warm["timeouts"]) / n,
+        "partial_rate": (sum(c < 1.0 for c in cov) / max(len(done), 1)),
+        "failure_rate": (h["failures"] - warm["failures"]) / n,
+        "coverage": {
+            "mean": float(cov.mean()) if len(cov) else None,
+            "min": float(cov.min()) if len(cov) else None,
+            "p10": float(np.quantile(cov, 0.10)) if len(cov) else None,
+        },
+        "recall_under_deadline": float(np.mean(recalls)) if recalls else None,
+        **(latency_percentiles(lat) if lat else
+           {"p50_ms": None, "p95_ms": None, "p99_ms": None}),
+        "accounting_exact": n == (len(done)
+                                  + (h["shed"] - warm["shed"])
+                                  + (h["timeouts"] - warm["timeouts"])
+                                  + (h["failures"] - warm["failures"])),
+        "p99_ewma_s": h["p99_ewma_s"],
+    }
+    # structural tail bound: a bounded queue admits at most MAX_QUEUE ahead
+    # of you -> wait <= (ceil(MAX_QUEUE/SLOTS)+1) batches + own service;
+    # 3x slack absorbs the container's service-wall noise
+    row["p99_bound_ms"] = 3e3 * steady_s * (MAX_QUEUE / SLOTS + 2)
+    row["p99_bounded"] = (row["p99_ms"] is not None
+                          and row["p99_ms"] <= row["p99_bound_ms"])
+    return row
+
+
+def main(json_path: str | None = None, *, dryrun: bool = False) -> dict:
+    if dryrun:
+        ds = load_dataset("sift", scale=0.04)       # ~400 x 128
+        n_req, d1, rates = 24, 32, (4.0,)
+        build = dict(d1=d1, row_block=128, block_group=1)
+        chaos = faults.inject(slow_block_s=0.002)   # force deadline expiry
+    else:
+        ds = dataset("sift")                        # 30k x 128
+        n_req, d1, rates = 128, 64, RATES
+        build = dict(d1=d1)
+        chaos = contextlib.nullcontext()
+    pca = shared_pca(ds)
+    pool = np.ascontiguousarray(ds.Q[:NQ_POOL], np.float32)
+    d2 = ((ds.X ** 2).sum(1)[None, :] - 2.0 * pool @ ds.X.T
+          + (pool ** 2).sum(1)[:, None])
+    row_idx = np.arange(pool.shape[0])[:, None]
+    part = np.argpartition(d2, K - 1, axis=1)[:, :K]
+    oracle = part[row_idx, np.argsort(d2[row_idx, part], axis=1)]
+
+    sess0 = _build_session(ds.X, pca, **build)
+    steady_s = _calibrate(sess0.serve(slots=SLOTS, k=K), pool)
+    del sess0
+    capacity_qps = SLOTS / steady_s
+    # budget ~ a short queue's worth of service; binds only under overload
+    deadline_s = 4.0 * steady_s
+    rng = np.random.default_rng(SEED)
+    qidx = [int(i % NQ_POOL) for i in range(n_req)]
+
+    rows = {}
+    sess = _build_session(ds.X, pca, **build)
+    with chaos:
+        for rate in rates:
+            lam = rate * capacity_qps
+            arrivals = np.cumsum(rng.exponential(1.0 / lam, n_req))
+            row = _rate_row(sess, pool, qidx, arrivals, oracle,
+                            deadline_s, steady_s)
+            row["offered_qps"] = lam
+            rows[f"{rate:g}x"] = row
+            emit(f"robustness/{ds.name}/{rate:g}x",
+                 0.0 if row["p50_ms"] is None else 1e3 * row["p50_ms"],
+                 p99_ms="-" if row["p99_ms"] is None
+                 else f"{row['p99_ms']:.1f}",
+                 shed=fmt3(row["shed_rate"]),
+                 timeout=fmt3(row["timeout_rate"]),
+                 partial=fmt3(row["partial_rate"]),
+                 cov="-" if row["coverage"]["mean"] is None
+                 else fmt3(row["coverage"]["mean"]),
+                 recall="-" if row["recall_under_deadline"] is None
+                 else fmt3(row["recall_under_deadline"]),
+                 ok=row["accounting_exact"])
+
+    overload = rows[f"{max(rates):g}x"]
+    out = {
+        "benchmark": "serving robustness under Poisson bursts at multiples "
+                     "of calibrated capacity (bounded queue, per-request "
+                     "deadlines, anytime partial results; discrete-event "
+                     "replay of measured service walls)",
+        "dataset": {"name": ds.name, "n": ds.n, "dim": ds.dim},
+        "k": K, "slots": SLOTS, "d1": d1, "max_queue": MAX_QUEUE,
+        "admission": "shed_oldest",
+        "calibration": {"steady_step_ms": 1e3 * steady_s,
+                        "capacity_qps": capacity_qps,
+                        "deadline_ms": 1e3 * deadline_s},
+        "measurement_note":
+            "2-vCPU container: service walls inherit up to +-40% "
+            "run-to-run noise; rates are paired against one calibration "
+            "so the shed/timeout/coverage ORDERING across 1x/2x/4x is the "
+            "signal, absolute walls are not.",
+        "accept": {
+            "accounting_exact_all_rates": all(
+                r["accounting_exact"] for r in rows.values()),
+            "overload_p99_bounded": bool(overload["p99_bounded"]),
+            "overload_sheds_or_times_out": (
+                overload["shed_rate"] + overload["timeout_rate"] > 0.0),
+            # a partial scan is exact over its prefix, so on shuffled data
+            # recall tracks coverage; 0.5x slack absorbs query skew
+            "recall_tracks_coverage": all(
+                r["recall_under_deadline"] is None
+                or r["coverage"]["mean"] is None
+                or r["recall_under_deadline"] >= 0.5 * r["coverage"]["mean"]
+                for r in rows.values()),
+        },
+        "rates": rows,
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", action="store_true",
+                    help="tiny corpus, 4x only, injected slow blocks, "
+                         "no JSON (CI smoke)")
+    args = ap.parse_args()
+    if args.dryrun:
+        result = main(dryrun=True)
+    else:
+        result = main("BENCH_robustness.json")
+    print(f"# accept: {result['accept']}")

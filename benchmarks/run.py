@@ -11,7 +11,8 @@ import time
 import traceback
 
 SUITES = ("query", "pruning", "ood", "metrics", "construction", "updates",
-          "hardware", "params", "stream", "adaptive", "serving")
+          "hardware", "params", "stream", "adaptive", "serving",
+          "robustness")
 
 
 def main() -> None:

@@ -10,6 +10,7 @@ One batched Session API over the host (numpy staged-scan) and JAX/Pallas
 
 See README.md for the method/backend support table.
 """
+from repro.api.persistence import DeltaWAL, IndexLoadError  # noqa: F401
 from repro.api.session import (INDEX_KINDS, METHODS, SearchSession,  # noqa: F401
                                open_index)
 from repro.api.types import (STAT_EXTRA_KEYS, SchedulePolicy,  # noqa: F401

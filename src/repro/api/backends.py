@@ -13,14 +13,18 @@ method's uniform ``device_state()`` export.
 """
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
-from repro.core.engine import (EXTRA_EST_SAVED_FLOPS, EXTRA_FALLBACK_BLOCKS,
-                               EXTRA_RULE_TIMELINE, EXTRA_SCREEN_PASS_MEAN,
-                               EXTRA_SURVIVORS_MEAN, EXTRA_UNCERTIFIED_MASK,
+from repro.core.engine import (EXTRA_COVERAGE, EXTRA_EST_SAVED_FLOPS,
+                               EXTRA_FALLBACK_BLOCKS, EXTRA_RULE_TIMELINE,
+                               EXTRA_SCREEN_PASS_MEAN, EXTRA_SURVIVORS_MEAN,
+                               EXTRA_UNCERTIFIED_MASK,
                                EXTRA_UNCERTIFIED_QUERIES, QueryBatch,
                                ScanStats, scan_topk)
 from repro.core.policy import PolicyConfig, finalize_adaptive_extra
+from repro.testing import faults
 
 
 class HostBackend:
@@ -48,9 +52,26 @@ class HostBackend:
         parity with the jax backend."""
         return "noop"
 
-    def search(self, Q, k: int, *, nprobe: int, ef: int):
-        """Batched staged-scan top-k; returns (dists, ids, stats)."""
+    def search(self, Q, k: int, *, nprobe: int, ef: int,
+               deadline_s: float | None = None):
+        """Batched staged-scan top-k; returns (dists, ids, stats).
+
+        ``deadline_s`` (seconds of wall budget for the whole batch) arms
+        anytime mode (DESIGN.md §7): the scan checks the clock between
+        candidate blocks, queries past the budget return their running
+        top-k, and per-query ``coverage`` (candidate blocks scanned, 1.0 =
+        complete) lands in ``stats.extra`` with partial queries flagged in
+        ``uncertified_mask``."""
+        faults.check_search(faults.active(self.policy))
         m = self.method
+        t_end = None
+        if deadline_s is not None:
+            if self.index_kind == "hnsw":
+                raise ValueError(
+                    "anytime deadlines interrupt scan-shaped searches "
+                    "(index='flat'/'ivf'); an HNSW graph walk has no block "
+                    "boundary to stop at (DESIGN.md §7)")
+            t_end = time.monotonic() + float(deadline_s)
         batch = QueryBatch.create(m, Q, self.policy.stage_dims(m.state["D"]))
         dists = np.empty((len(batch), k), np.float32)
         ids = np.empty((len(batch), k), np.int64)
@@ -59,10 +80,11 @@ class HostBackend:
             if self.index_kind == "flat":
                 if all_ids is None:
                     all_ids = np.arange(m.state["N"])
-                d, i = scan_topk(m, batch, qi, all_ids, k, policy=self._pol)
+                d, i = scan_topk(m, batch, qi, all_ids, k, policy=self._pol,
+                                 deadline_ts=t_end)
             elif self.index_kind == "ivf":
                 d, i = self.index.search(m, batch, qi, k, nprobe,
-                                         policy=self._pol)
+                                         policy=self._pol, deadline_ts=t_end)
             else:                   # hnsw
                 d, i = self.index.search(m, batch, qi, k, max(ef, k))
             n = min(k, len(d))
@@ -82,9 +104,17 @@ class HostBackend:
             # no completion budget on the host scan: pass == completed
             stats.extra[EXTRA_SURVIVORS_MEAN] = completed / max(nq, 1)
             stats.extra[EXTRA_SCREEN_PASS_MEAN] = completed / max(nq, 1)
-        # every host survivor is exactly completed -> trivially certified
-        stats.extra[EXTRA_UNCERTIFIED_QUERIES] = 0.0
-        stats.extra[EXTRA_UNCERTIFIED_MASK] = np.zeros(nq, bool)
+        # every host survivor is exactly completed -> certified, UNLESS an
+        # anytime deadline cut the scan short: unscanned candidate blocks
+        # may hold true neighbors, so partial queries are uncertified
+        cov = stats.extra.pop("_coverage", None)
+        coverage = np.ones(nq, np.float32)
+        if cov is not None:
+            coverage[:len(cov)] = np.asarray(cov, np.float32)
+        stats.extra[EXTRA_COVERAGE] = coverage
+        stats.extra[EXTRA_UNCERTIFIED_MASK] = coverage < 1.0
+        stats.extra[EXTRA_UNCERTIFIED_QUERIES] = float(
+            (coverage < 1.0).mean())
         finalize_adaptive_extra(stats)
 
 
@@ -322,11 +352,11 @@ class JaxBackend:
                           (xr[:, :d1] ** 2).sum(1), (xr[:, d1:] ** 2).sum(1)))
             self._mesh_extra_state = rule_scalars(dstate, d1)
 
-    def _config(self, k: int):
+    def _config(self, k: int, anytime: bool = False):
         from repro.core.jax_engine import DcoEngineConfig
 
-        if k in self._cfg_cache:
-            return self._cfg_cache[k]
+        if (k, anytime) in self._cfg_cache:
+            return self._cfg_cache[(k, anytime)]
         ds, p = self._dstate, self.policy
         kw = dict(kind=ds["kind"], d1=self._d1, k=k, capacity=p.capacity,
                   query_chunk=p.query_chunk, tau_slack=p.tau_slack,
@@ -340,7 +370,9 @@ class JaxBackend:
             kw["theta"] = self._ratio_theta(k)
         elif ds["kind"] == "opq":
             kw["theta"] = float(ds["theta"])
-        if ds["kind"] != "fdscan":      # fdscan has nothing to fall back to
+        # fdscan has nothing to fall back to; anytime deadline calls run the
+        # fixed resumable scan (DESIGN.md §7), so they strip the policy too
+        if ds["kind"] != "fdscan" and not anytime:
             kw["policy"] = PolicyConfig.from_schedule(p)
         # resolve use_kernel HERE so the cached config is final: an
         # unresolved None makes stream_topk dataclasses.replace() a fresh
@@ -353,7 +385,7 @@ class JaxBackend:
             from repro.kernels.ops import _on_tpu
             kw["use_kernel"] = _on_tpu()
         cfg = DcoEngineConfig(**kw)
-        self._cfg_cache[k] = cfg
+        self._cfg_cache[(k, anytime)] = cfg
         return cfg
 
     def _ratio_theta(self, k: int) -> float:
@@ -397,25 +429,44 @@ class JaxBackend:
         return probed.astype(np.int32), self._list_sizes[probed].sum(1)
 
     # -- search --------------------------------------------------------------
-    def search(self, Q, k: int, *, nprobe: int, ef: int):
+    def search(self, Q, k: int, *, nprobe: int, ef: int,
+               deadline_s: float | None = None):
         """Batched device top-k; returns (dists, ids, stats).  ``ef`` is
-        accepted for signature parity with the host backend (unused)."""
+        accepted for signature parity with the host backend (unused).
+
+        ``deadline_s`` (seconds of wall budget for the whole batch) arms the
+        streaming engine's anytime mode (DESIGN.md §7): the corpus is walked
+        in block groups with a wall check at each boundary, an expired
+        budget returns the running top-k, and the scanned fraction lands in
+        ``stats.extra["coverage"]`` with partial queries flagged
+        uncertified.  Single-device stream engine only (the adaptive policy
+        is stripped for the deadline call; mesh raises)."""
         import jax
         import jax.numpy as jnp
         from repro.core.jax_engine import make_distributed_topk, two_stage_topk
         from repro.core.stream_engine import stream_topk
 
+        faults.check_search(faults.active(self.policy))
         if self._dstate is None:
             self._materialize()
-        cfg = self._config(k)
+        t_end = None
+        if deadline_s is not None:
+            if self.mesh is not None:
+                raise ValueError(
+                    "anytime deadlines are single-device (the mesh scan has "
+                    "no per-group host sync to check the clock at; "
+                    "DESIGN.md §7)")
+            t_end = time.monotonic() + float(deadline_s)
+        cfg = self._config(k, anytime=t_end is not None)
         ql, qt, qe = self._prep_queries(Q)
         nq, N, D = ql.shape[0], self.method.state["N"], self.method.state["D"]
         engine = self.policy.engine
-        if cfg.kind == "opq" or self.index_kind == "ivf" or cfg.policy is not None:
+        if (cfg.kind == "opq" or self.index_kind == "ivf"
+                or cfg.policy is not None or t_end is not None):
             engine = "stream"       # only the streaming engine serves these
         qe = {key: jnp.asarray(v) for key, v in qe.items()}
         cand_per_q = np.full(nq, N, np.float64)
-        passed = dmin = report = None
+        passed = dmin = report = coverage = None
         n_anchor = 0                # two_stage completes k anchors per query
         if self.mesh is None:
             if engine == "two_stage":
@@ -452,7 +503,8 @@ class JaxBackend:
                             == probed[:, None, :]).any(-1).sum(1)
                 out = stream_topk(
                     st, jnp.asarray(ql), jnp.asarray(qt), cfg, qe,
-                    probe, blocks=blocks)
+                    probe, blocks=blocks, deadline_ts=t_end,
+                    block_group=self.policy.anytime_block_group)
             # one batched transfer: the post-jit slices (and the adaptive
             # report) are tiny lazy dispatches — converting them one
             # np.asarray at a time serializes a sync per output
@@ -461,8 +513,14 @@ class JaxBackend:
                 d, i, surv = out
             elif cfg.policy is not None:
                 d, i, surv, passed, dmin, report = out
+            elif t_end is not None:
+                d, i, surv, passed, dmin, coverage = out
             else:
                 d, i, surv, passed, dmin = out
+            if coverage is not None:
+                # partial scans only touched this fraction of the corpus:
+                # charge candidate work pro rata so pruning stats stay honest
+                cand_per_q = cand_per_q * coverage
         else:
             if cfg not in self._mesh_fns:
                 self._mesh_fns[cfg] = jax.jit(
@@ -507,6 +565,17 @@ class JaxBackend:
                 np.asarray(report["est_saved_flops"]).sum())
             stats.extra[EXTRA_RULE_TIMELINE] = [
                 float(v) for v in np.asarray(report["rule_timeline"])]
+        # anytime coverage (DESIGN.md §7): every query of the batch shares
+        # the scanned-block fraction; partial scans are uncertified even if
+        # the dropped-estimate certificate held over the scanned prefix
+        cov_arr = np.full(nq, 1.0 if coverage is None else coverage,
+                          np.float32)
+        stats.extra[EXTRA_COVERAGE] = cov_arr
+        mask = stats.extra.get(EXTRA_UNCERTIFIED_MASK)
+        if mask is not None and coverage is not None and coverage < 1.0:
+            stats.extra[EXTRA_UNCERTIFIED_MASK] = mask | (cov_arr < 1.0)
+            stats.extra[EXTRA_UNCERTIFIED_QUERIES] = float(
+                stats.extra[EXTRA_UNCERTIFIED_MASK].mean())
         return (np.asarray(d, np.float32), np.asarray(i, np.int64), stats)
 
     @staticmethod

@@ -1,19 +1,170 @@
-"""Save/load of fitted sessions.
+"""Save/load of fitted sessions, plus the crash-safe delta WAL.
 
 The fitted state is plain numpy (method state dicts, index arrays), so a
 single pickle payload round-trips everything the online path needs — fit
 once, serve anywhere.  Device arrays are NOT persisted; the jax backend
 re-materializes them lazily from ``device_state()`` on first search.
+
+Dynamic inserts between snapshots are covered by :class:`DeltaWAL`
+(DESIGN.md §7): a session saved to ``path`` arms an append-only log at
+``path + ".wal"`` and every later ``add()`` writes its rows there —
+*before* applying them, fsync'd — as one self-describing frame::
+
+    b"DWAL" | uint32 payload_len | uint32 crc32(payload) | payload
+
+where the payload is an npz archive of ``{n_before, rows}``.  ``n_before``
+(the corpus size the frame was logged against) makes replay idempotent:
+loading a snapshot replays only frames with ``n_before >= session.n``, so
+a double replay — or a replay against a snapshot that already absorbed the
+frame via a later ``save()`` — applies nothing twice.  A crash mid-write
+leaves a torn tail frame; the reader detects it by length/CRC, drops it
+with a warning, and keeps everything before it.  A torn frame was never
+acknowledged to the caller (the write happens before ``add()`` returns),
+so dropping it loses no acknowledged insert.  ``save()`` clears the log:
+the new snapshot supersedes it.
+
+Load failures raise :class:`IndexLoadError` naming the path and the likely
+cause, instead of leaking pickle/OS internals.
 """
 from __future__ import annotations
 
+import io
+import os
 import pickle
+import struct
+import warnings
+import zlib
+
+import numpy as np
 
 FORMAT_VERSION = 1
 
+_WAL_MAGIC = b"DWAL"
+_WAL_HEADER = struct.Struct("<II")     # payload length, crc32(payload)
+
+
+class IndexLoadError(RuntimeError):
+    """A saved index could not be loaded.  Carries the offending ``path``
+    and a one-line likely cause so serving code can log/alert usefully."""
+
+    def __init__(self, path, cause: str):
+        self.path = str(path)
+        self.cause = cause
+        super().__init__(f"cannot load index from {self.path}: {cause}")
+
+
+def wal_path(path) -> str:
+    """The delta-WAL file tied to snapshot ``path``."""
+    return f"{path}.wal"
+
+
+class DeltaWAL:
+    """Append-only, CRC-framed, fsync'd log of delta inserts (DESIGN.md §7).
+
+    One instance per snapshot path; ``append`` is called by
+    ``SearchSession.add()`` *before* the rows are applied (write-ahead), so
+    an acknowledged insert is always on disk.  ``frames()`` yields the
+    valid prefix of the log, stopping at (and warning about) the first
+    torn/corrupt frame.  ``clear()`` truncates after a snapshot.
+    """
+
+    def __init__(self, path):
+        self.path = str(path)
+
+    # -- write ----------------------------------------------------------------
+    def append(self, rows: np.ndarray, n_before: int, *, plan=None) -> None:
+        """Frame ``rows`` (inserted when the corpus held ``n_before``
+        vectors) and fsync it.  ``plan`` is an optional
+        ``testing.FaultPlan`` whose ``torn_frame_keep`` simulates power
+        loss mid-write: the frame's byte prefix is written and
+        ``SimulatedCrash`` raised, so the caller never acknowledges."""
+        from repro.testing import faults
+
+        buf = io.BytesIO()
+        np.savez(buf, n_before=np.int64(n_before),
+                 rows=np.ascontiguousarray(rows, np.float32))
+        payload = buf.getvalue()
+        frame = (_WAL_MAGIC + _WAL_HEADER.pack(len(payload),
+                                               zlib.crc32(payload)) + payload)
+        out, crash = faults.torn_frame(plan, frame)
+        with open(self.path, "ab") as f:
+            f.write(out)
+            f.flush()
+            os.fsync(f.fileno())
+        if crash:
+            raise faults.SimulatedCrash(
+                f"injected crash mid-WAL-frame: wrote {len(out)} of "
+                f"{len(frame)} bytes to {self.path}")
+
+    # -- read -----------------------------------------------------------------
+    def _scan(self) -> tuple[list[tuple[int, np.ndarray]], int, int]:
+        """Parse the log: (valid frames, bytes of valid prefix, file size).
+        A torn or corrupt tail warns — never a crash — because a torn frame
+        was by construction never acknowledged."""
+        try:
+            with open(self.path, "rb") as f:
+                data = f.read()
+        except FileNotFoundError:
+            return [], 0, 0
+        out: list[tuple[int, np.ndarray]] = []
+        off, hdr = 0, _WAL_HEADER.size
+        while off < len(data):
+            head = data[off:off + 4 + hdr]
+            if len(head) < 4 + hdr or head[:4] != _WAL_MAGIC:
+                warnings.warn(
+                    f"delta WAL {self.path}: torn/garbled frame header at "
+                    f"byte {off}; dropping the unacknowledged tail "
+                    f"({len(data) - off} bytes)", stacklevel=3)
+                break
+            ln, crc = _WAL_HEADER.unpack(head[4:])
+            payload = data[off + 4 + hdr: off + 4 + hdr + ln]
+            if len(payload) < ln or zlib.crc32(payload) != crc:
+                warnings.warn(
+                    f"delta WAL {self.path}: frame at byte {off} fails "
+                    f"length/CRC (torn write); dropping the unacknowledged "
+                    f"tail ({len(data) - off} bytes)", stacklevel=3)
+                break
+            with np.load(io.BytesIO(payload)) as z:
+                out.append((int(z["n_before"]), np.asarray(z["rows"],
+                                                          np.float32)))
+            off += 4 + hdr + ln
+        return out, off, len(data)
+
+    def frames(self) -> list[tuple[int, np.ndarray]]:
+        """The valid ``(n_before, rows)`` frames, in log order (torn tail
+        dropped with a warning)."""
+        return self._scan()[0]
+
+    def clear(self) -> None:
+        """Truncate the log (a fresh snapshot supersedes every frame)."""
+        with open(self.path, "wb"):
+            pass
+
+    def replay(self, session) -> int:
+        """Apply every frame not already reflected in ``session`` (frames
+        with ``n_before < session.n`` are skipped — that is what makes a
+        double replay a no-op), then truncate any torn tail so the *next*
+        ``append`` lands on a frame boundary instead of behind garbage.
+        Returns rows applied."""
+        frames, valid_end, size = self._scan()
+        if valid_end < size:           # torn tail: cut the log back to the
+            with open(self.path, "rb+") as f:   # last acknowledged frame
+                f.truncate(valid_end)
+                f.flush()
+                os.fsync(f.fileno())
+        applied = 0
+        for n_before, rows in frames:
+            if n_before < session.n:
+                continue               # snapshot or earlier replay has it
+            session._apply_add(rows)
+            applied += rows.shape[0]
+        return applied
+
 
 def save_session(session, path) -> None:
-    """Pickle a session's fitted method state, index, and policy."""
+    """Pickle a session's fitted method state, index, and policy; then arm
+    the delta WAL at ``path + ".wal"`` (clearing any previous log — this
+    snapshot includes everything) so later ``add()`` calls are crash-safe."""
     payload = {
         "version": FORMAT_VERSION,
         "method_name": session.method.name,
@@ -26,19 +177,43 @@ def save_session(session, path) -> None:
     }
     with open(path, "wb") as f:
         pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
+        f.flush()
+        os.fsync(f.fileno())
+    session.wal = DeltaWAL(wal_path(path))
+    session.wal.clear()
 
 
 def load_session(path, *, backend: str | None = None, mesh=None):
-    """Rebuild a ``SearchSession`` from :func:`save_session` output."""
+    """Rebuild a ``SearchSession`` from :func:`save_session` output, then
+    replay its delta WAL (inserts since the snapshot).  Raises
+    :class:`IndexLoadError` on any unreadable/unsupported snapshot."""
     from repro.api.session import SearchSession
     from repro.core.methods import make_method
 
-    with open(path, "rb") as f:
-        payload = pickle.load(f)
+    try:
+        with open(path, "rb") as f:
+            payload = pickle.load(f)
+    except FileNotFoundError:
+        raise IndexLoadError(path, "file does not exist") from None
+    except (pickle.UnpicklingError, EOFError, AttributeError,
+            ImportError, IndexError) as exc:
+        raise IndexLoadError(
+            path, f"not a readable session snapshot (truncated or foreign "
+            f"file? unpickling failed with {type(exc).__name__}: {exc})",
+        ) from exc
+    if not isinstance(payload, dict) or "method_name" not in payload:
+        raise IndexLoadError(
+            path, "pickle payload is not a session snapshot")
     if payload.get("version") != FORMAT_VERSION:
-        raise ValueError(f"unsupported session format {payload.get('version')!r}")
+        raise IndexLoadError(
+            path, f"snapshot format version {payload.get('version')!r} is "
+            f"not supported (this build reads version {FORMAT_VERSION}; "
+            "re-save with the matching release)")
     m = make_method(payload["method_name"], **payload["method_params"])
     m.state = payload["method_state"]          # fitted state, no refit
-    return SearchSession(m, payload["index_kind"], payload["index"],
+    sess = SearchSession(m, payload["index_kind"], payload["index"],
                          backend or payload["backend"], payload["policy"],
                          mesh=mesh)
+    sess.wal = DeltaWAL(wal_path(path))
+    sess.wal.replay(sess)
+    return sess

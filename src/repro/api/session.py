@@ -43,6 +43,7 @@ class SearchSession:
         self.backend = make_backend(backend, method, index_kind, index,
                                     self.policy, mesh=mesh)
         self.last_write_mode: str | None = None   # set by add()
+        self.wal = None   # DeltaWAL once save()/load() ties a path to us
 
     # -- introspection -------------------------------------------------------
     @property
@@ -61,11 +62,37 @@ class SearchSession:
         return self.backend.name
 
     # -- online --------------------------------------------------------------
-    def search(self, Q, k: int = 10, *, nprobe: int = 16, ef: int = 64) -> SearchResult:
+    def search(self, Q, k: int = 10, *, nprobe: int = 16, ef: int = 64,
+               deadline_s: float | None = None) -> SearchResult:
         """Batched top-k for all rows of ``Q``; one online prep for the whole
-        batch (the paper's O(D^2) per-query rotation, amortized)."""
+        batch (the paper's O(D^2) per-query rotation, amortized).
+
+        ``deadline_s`` arms anytime search (DESIGN.md §7): the scan stops
+        after the last row-block (jax: block group) that finishes within
+        ``deadline_s`` seconds of wall time and returns the running top-k as
+        a partial result.  Partial queries report ``coverage < 1.0`` and a
+        set ``uncertified_mask`` bit in ``result.stats.extra``; with a
+        generous deadline the result is bit-identical to the non-deadline
+        path.  Flat/IVF only (HNSW walks and mesh scans reject it)."""
+        Q = np.atleast_2d(np.asarray(Q))
+        if Q.dtype.kind not in "fiu":
+            raise ValueError(
+                f"search(): expected a numeric query array, got dtype {Q.dtype}")
+        Q = np.ascontiguousarray(Q, np.float32)
+        if not np.isfinite(Q).all():
+            bad = int((~np.isfinite(Q).all(axis=1)).sum())
+            raise ValueError(
+                f"search(): {bad} of {Q.shape[0]} queries contain NaN/Inf "
+                "values; distances to non-finite queries are meaningless "
+                "and would poison the running top-k threshold")
+        if deadline_s is not None and deadline_s <= 0.0:
+            raise ValueError(
+                f"search(): deadline_s must be > 0 (got {deadline_s}); the "
+                "engines always finish at least one block group, so a "
+                "non-positive budget cannot mean 'return nothing'")
         t0 = time.perf_counter()
-        dists, ids, stats = self.backend.search(Q, k, nprobe=nprobe, ef=ef)
+        dists, ids, stats = self.backend.search(Q, k, nprobe=nprobe, ef=ef,
+                                                deadline_s=deadline_s)
         return SearchResult(dists, ids, stats, time.perf_counter() - t0,
                             self.backend.name)
 
@@ -76,7 +103,13 @@ class SearchSession:
         On the jax backend inserts below ``policy.delta_merge_threshold``
         rows land in a delta segment scanned alongside the cached main block
         layout (no re-materialization; DESIGN.md §6); the last write mode
-        taken is readable as ``session.last_write_mode``."""
+        taken is readable as ``session.last_write_mode``.
+
+        When the session is tied to a snapshot path (after ``save()`` or
+        ``load()``), the rows are first written to the crash-safe delta WAL
+        (fsync'd, before any state changes; DESIGN.md §7) — a crash at any
+        point after ``add()`` returns loses nothing, and a crash mid-write
+        tears only a frame that was never acknowledged."""
         Xnew = np.atleast_2d(np.asarray(Xnew))
         if Xnew.dtype.kind not in "fiu":
             raise ValueError(
@@ -89,6 +122,15 @@ class SearchSession:
                 f"add(): vectors have dimension {Xnew.shape[1]}, but this "
                 f"index was built with D={self.dim}")
         Xnew = np.ascontiguousarray(Xnew, np.float32)
+        if self.wal is not None:
+            from repro.testing import faults
+            self.wal.append(Xnew, self.n, plan=faults.active(self.policy))
+        return self._apply_add(Xnew)
+
+    def _apply_add(self, Xnew: np.ndarray) -> "SearchSession":
+        """The state mutation of :meth:`add`, sans validation and WAL
+        logging — the WAL's ``replay()`` calls this directly so replayed
+        frames are not re-logged."""
         parts = None
         if self.index_kind == "hnsw":
             # insert_batch appends to the method itself, then links
@@ -113,34 +155,56 @@ class SearchSession:
 
     # -- persistence ---------------------------------------------------------
     def save(self, path) -> None:
-        """Persist the fitted state + index to ``path`` (api.persistence)."""
+        """Persist the fitted state + index to ``path`` (api.persistence)
+        and arm the crash-safe delta WAL at ``path + ".wal"`` — later
+        ``add()`` calls are logged there and survive a crash (the log is
+        cleared first: this snapshot supersedes it)."""
         from repro.api.persistence import save_session
         save_session(self, path)
 
     @classmethod
     def load(cls, path, *, backend: str | None = None, mesh=None) -> "SearchSession":
-        """Rebuild a saved session; ``backend``/``mesh`` may be overridden."""
+        """Rebuild a saved session and replay its delta WAL (inserts made
+        after the snapshot); ``backend``/``mesh`` may be overridden.
+        Raises ``api.IndexLoadError`` on an unreadable snapshot."""
         from repro.api.persistence import load_session
         return load_session(path, backend=backend, mesh=mesh)
 
 
-def open_index(X, *, index: str = "flat", method: str = "DADE",
-               backend: str = "host", schedule: SchedulePolicy | None = None,
+def open_index(X=None, *, index: str = "flat", method: str = "DADE",
+               backend: str | None = None,
+               schedule: SchedulePolicy | None = None,
                method_params: dict | None = None,
                index_params: dict | None = None,
                train_queries=None, train_k: int = 10,
                seed: int = 0, mesh=None, serving: bool = False,
-               serving_params: dict | None = None):
+               serving_params: dict | None = None, path=None):
     """Fit ``method`` on ``X``, build ``index``, and return a ready session.
 
     ``method`` is one of the paper's 8 (``repro.api.METHODS``); training-based
     methods (DDCpca/DDCopq) are trained on ``train_queries`` (default: a
     sample of X rows) for ``k=train_k``.  ``schedule`` tunes staging on both
-    backends; ``mesh`` (jax backend only) shards the corpus for a distributed
-    global top-k.  ``serving=True`` wraps the session in a continuous-
-    batching ``repro.serving.SearchService`` (``serving_params`` are its
-    knobs) and returns that instead.
+    backends (default ``backend="host"``); ``mesh`` (jax backend only) shards
+    the corpus for a distributed global top-k.  ``serving=True`` wraps the
+    session in a continuous-batching ``repro.serving.SearchService``
+    (``serving_params`` are its knobs) and returns that instead.
+
+    ``path`` ties the session to a snapshot file (DESIGN.md §7).  With
+    ``X=None`` the session is *loaded* from ``path`` — snapshot plus a
+    replay of its delta WAL, so inserts acknowledged after the last
+    ``save()`` survive a crash (``IndexLoadError`` on unreadable files).
+    With both given, the fresh index is immediately saved to ``path``,
+    arming the WAL for every later ``add()``.
     """
+    if X is None:
+        if path is None:
+            raise ValueError("open_index(): pass vectors X to build an "
+                             "index, or path= to load a saved one")
+        sess = SearchSession.load(path, backend=backend, mesh=mesh)
+        if serving:
+            return sess.serve(**(serving_params or {}))
+        return sess
+    backend = backend if backend is not None else "host"
     X = np.ascontiguousarray(np.atleast_2d(X), np.float32)
     policy = schedule if schedule is not None else SchedulePolicy()
     if method not in ALL_METHODS:
@@ -176,6 +240,8 @@ def open_index(X, *, index: str = "flat", method: str = "DADE",
     else:
         raise ValueError(f"index must be one of {INDEX_KINDS}, got {index!r}")
     sess = SearchSession(m, index, idx, backend, policy, mesh=mesh)
+    if path is not None:
+        sess.save(path)
     if serving:
         return sess.serve(**(serving_params or {}))
     return sess

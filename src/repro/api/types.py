@@ -5,9 +5,10 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.engine import (EXTRA_EST_SAVED_FLOPS, EXTRA_FALLBACK_BLOCKS,
-                               EXTRA_RULE_TIMELINE, EXTRA_SCREEN_PASS_MEAN,
-                               EXTRA_SURVIVORS_MEAN, EXTRA_UNCERTIFIED_MASK,
+from repro.core.engine import (EXTRA_COVERAGE, EXTRA_EST_SAVED_FLOPS,
+                               EXTRA_FALLBACK_BLOCKS, EXTRA_RULE_TIMELINE,
+                               EXTRA_SCREEN_PASS_MEAN, EXTRA_SURVIVORS_MEAN,
+                               EXTRA_UNCERTIFIED_MASK,
                                EXTRA_UNCERTIFIED_QUERIES, ScanStats,
                                make_schedule)
 
@@ -49,6 +50,15 @@ STAT_EXTRA_KEYS: dict = {
         "serving.SearchService threads it into per-request results).  All "
         "False on the host path; absent on the legacy two_stage engine, "
         "which has no per-block certificate.",
+    EXTRA_COVERAGE:
+        "Per-query float32 array: fraction of candidate blocks actually "
+        "scanned for query i (anytime search, DESIGN.md §7).  1.0 "
+        "everywhere unless the search ran with a ``deadline_s`` that "
+        "expired mid-scan; any value < 1.0 also sets that query's "
+        "uncertified_mask bit, since an unscanned block may hold a true "
+        "neighbor.  On the jax path the whole batch advances together, so "
+        "coverage is uniform across queries; the host path checks the "
+        "deadline per query, so later queries can report 0.0.",
 }
 
 
@@ -84,6 +94,16 @@ class SchedulePolicy:
     to be before it is trusted (>1 = demand headroom; raise it to fall back
     earlier).  Served by the streaming jax engine and the host flat/IVF
     scan; ignored by host HNSW walks and rejected on the mesh path.
+
+    ``anytime_block_group`` is the deadline-check granularity of anytime
+    search on the jax backend (DESIGN.md §7): a ``deadline_s`` search runs
+    the streaming scan this many row blocks at a time, syncing with the
+    host between groups to test the wall clock.  Smaller = finer deadline
+    resolution but more device/host round-trips; the first group always
+    completes, so a result is returned even for an already-expired
+    deadline.  ``faults`` optionally scopes a ``repro.testing.FaultPlan``
+    to sessions built with this policy (chaos testing; see
+    ``repro.testing.faults``).
     """
 
     delta0: int = 32
@@ -100,6 +120,8 @@ class SchedulePolicy:
     adaptive: bool = False
     fallback_margin: float = 1.5
     delta_merge_threshold: int = 4096
+    anytime_block_group: int = 8
+    faults: object | None = None
 
     def stage_dims(self, D: int) -> list:
         """Host screening stage dims for dimensionality ``D`` (the paper's

@@ -28,6 +28,8 @@ EXTRA_FALLBACK_BLOCKS = "fallback_blocks"        # adaptive: fdscan blocks / que
 EXTRA_EST_SAVED_FLOPS = "est_saved_flops"        # adaptive: saved vs fdscan, batch
 EXTRA_RULE_TIMELINE = "rule_timeline"            # adaptive: fallback frac / block
 EXTRA_UNCERTIFIED_MASK = "uncertified_mask"      # per-query certificate failures
+EXTRA_COVERAGE = "coverage"                      # per-query scanned fraction
+                                                 # (anytime search; 1.0 = full)
 
 
 def make_schedule(D: int, delta0: int = 32, delta_d: int = 64, max_stages: int = 4):
@@ -95,7 +97,8 @@ def topk_merge(best_d, best_i, new_d, new_i, k):
 
 
 def scan_topk(method, batch: QueryBatch, qi: int, cand_ids, k, *,
-              block: int = 1024, init_d=None, init_i=None, policy=None):
+              block: int = 1024, init_d=None, init_i=None, policy=None,
+              deadline_ts=None):
     """DCO-accelerated exact-completion top-k over ``cand_ids`` for query
     ``qi`` of ``batch``.  Stats accumulate into ``batch.stats``.
 
@@ -105,7 +108,19 @@ def scan_topk(method, batch: QueryBatch, qi: int, cand_ids, k, *,
     loop and complete every candidate exactly (an fdscan block).  Fallback
     only *adds* scanned dims, so results are unchanged — the host scan
     completes every survivor exhaustively either way.
+
+    ``deadline_ts`` (absolute ``time.monotonic()`` timestamp) arms anytime
+    mode (DESIGN.md §7): the wall clock is checked before each candidate
+    block and on expiry the running top-k is returned as-is.  The fraction
+    of candidate blocks actually scanned is appended to the private
+    ``stats.extra["_coverage"]`` list (one entry per scan call, in call
+    order); the backend folds it into the public ``EXTRA_COVERAGE`` array
+    and flags partial queries via ``EXTRA_UNCERTIFIED_MASK``.
     """
+    import time as _time
+
+    from repro.testing import faults
+
     D = method.state["D"]
     ctx, stats = batch.ctx, batch.stats
     stages = method.stage_dims(batch.schedule)
@@ -116,7 +131,14 @@ def scan_topk(method, batch: QueryBatch, qi: int, cand_ids, k, *,
     best_d = init_d if init_d is not None else np.full(k, np.inf, np.float32)
     best_i = init_i if init_i is not None else np.full(k, -1, np.int64)
     cand_ids = np.asarray(cand_ids, np.int64)
+    fp = faults.active() if deadline_ts is not None else None
+    blocks_done, n_blocks = 0, max(1, -(-len(cand_ids) // block))
     for s in range(0, len(cand_ids), block):
+        if deadline_ts is not None:
+            if _time.monotonic() > deadline_ts:
+                break
+            faults.sleep_block(fp)
+        blocks_done += 1
         ids = cand_ids[s:s + block]
         tau_sq = float(best_d[-1])
         alive = ids
@@ -162,4 +184,7 @@ def scan_topk(method, batch: QueryBatch, qi: int, cand_ids, k, *,
         best_d, best_i = topk_merge(best_d, best_i, ex.astype(np.float32), alive, k)
     if hp is not None:
         hp.flush(stats)
+    if deadline_ts is not None and stats is not None:
+        cov = 1.0 if len(cand_ids) == 0 else blocks_done / n_blocks
+        stats.extra.setdefault("_coverage", []).append(cov)
     return best_d, best_i

@@ -58,6 +58,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -162,7 +163,8 @@ def _adaptive(cfg: DcoEngineConfig) -> bool:
 
 
 def _scan_blocks(cfg: DcoEngineConfig, state, xs, ql, qt, qe, pr, B, D,
-                 q_ok=None, init_tau=None, init_ewma=None, forced=False):
+                 q_ok=None, init_tau=None, init_ewma=None, forced=False,
+                 init_carry=None, return_carry=False):
     """Inner lax.scan over corpus row blocks for one query chunk.
 
     When ``cfg.policy`` is adaptive, the carry also holds a ``PolicyState``
@@ -174,6 +176,14 @@ def _scan_blocks(cfg: DcoEngineConfig, state, xs, ql, qt, qe, pr, B, D,
     bound + sample pass fraction); ``forced=True`` (python-static) runs the
     dedicated conditional-free full-scan body for chunks the seed already
     placed in fallback.
+
+    ``init_carry``/``return_carry`` (fixed, non-adaptive path only) make the
+    scan RESUMABLE: the anytime driver (DESIGN.md §7) walks the corpus in
+    block groups, threading the full ``(best_d, best_i, tau, surv, passed)``
+    carry between jit calls so a deadline can interrupt the scan at any
+    group boundary with the running top-k intact.  Resuming over block
+    groups replays the exact per-block step sequence of the one-shot scan,
+    so an uninterrupted grouped scan is bit-identical to it.
     """
     from repro.core.policy import pass_threshold
     from repro.kernels import ref
@@ -442,7 +452,12 @@ def _scan_blocks(cfg: DcoEngineConfig, state, xs, ql, qt, qe, pr, B, D,
             jnp.full((c,), jnp.inf, jnp.float32),
             jnp.zeros((c,), jnp.int32), jnp.zeros((c,), jnp.int32))
     if pol is None:
-        (d, i, _, surv, passed), dropped = jax.lax.scan(step, init, xs)
+        if init_carry is not None:
+            init = init_carry
+        carry, dropped = jax.lax.scan(step, init, xs)
+        if return_carry:
+            return carry, dropped.min(0)
+        d, i, _, surv, passed = carry
         return d, i, surv, passed, dropped.min(0)
 
     nb = xs["xl"].shape[0]
@@ -524,6 +539,38 @@ def _stream_topk_padded(state: dict, xs: dict, q_lead, q_tail, q_extra: dict,
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
+def _anytime_group(state: dict, xs: dict, q_lead, q_tail, q_extra: dict,
+                   probe, carry, cfg: DcoEngineConfig):
+    """Resume the fixed streaming scan over ONE group of corpus blocks.
+
+    ``carry`` is the whole padded batch's running state —
+    ``(best_d (nq,k), best_i (nq,k), tau (nq,), surv (nq,), passed (nq,),
+    dropped_min (nq,))`` — threaded between jit calls by the anytime driver
+    in :func:`stream_topk` (DESIGN.md §7).  Each call advances every query
+    chunk by this group's blocks and returns the updated carry; the group
+    boundary is the python-level point where the deadline is checked."""
+    D = q_lead.shape[1] + q_tail.shape[1]
+    B = xs["xl"].shape[1]
+    nq = q_lead.shape[0]
+    c = min(cfg.query_chunk, nq)
+    ql = q_lead.reshape(nq // c, c, -1)
+    qt = q_tail.reshape(nq // c, c, -1)
+    qe = {key: v.reshape(nq // c, c, *v.shape[1:]) for key, v in q_extra.items()}
+    pr = None if probe is None else probe.reshape(nq // c, c, -1)
+    cc = jax.tree_util.tree_map(
+        lambda a: a.reshape(nq // c, c, *a.shape[1:]), carry)
+
+    def one_chunk(args):
+        cql, cqt, cqe, cpr, ccar = args
+        new, dmin_g = _scan_blocks(cfg, state, xs, cql, cqt, cqe, cpr, B, D,
+                                   init_carry=ccar[:5], return_carry=True)
+        return new + (jnp.minimum(ccar[5], dmin_g),)
+
+    out = jax.lax.map(one_chunk, (ql, qt, qe, pr, cc))
+    return tuple(a.reshape(nq, *a.shape[2:]) for a in out)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
 def _seed_eval(state: dict, xs: dict, q_lead, q_tail, q_extra: dict,
                cfg: DcoEngineConfig):
     """Pre-scan seed for the adaptive policy, over the whole padded batch.
@@ -575,8 +622,46 @@ def _stream_chunk(state: dict, xs: dict, ql, qt, qe: dict, pr, qv, tau0, ew0,
                         init_tau=tau0, init_ewma=ew0, forced=forced)
 
 
+def _anytime_topk(state: dict, blocks: dict, q_lead, q_tail, q_extra: dict,
+                  probe, cfg: DcoEngineConfig, nq: int, deadline_ts: float,
+                  block_group: int):
+    """Deadline-aware anytime driver (DESIGN.md §7): python loop over block
+    groups, one host sync + wall check per group, early exit with the
+    running top-k on expiry.  Returns the 5-tuple of :func:`stream_topk`
+    plus ``coverage`` (fraction of corpus blocks scanned)."""
+    from repro.testing import faults
+
+    fp = faults.active()
+    nqp, k = q_lead.shape[0], cfg.k
+    carry = (jnp.full((nqp, k), jnp.inf, jnp.float32),
+             jnp.full((nqp, k), -1, jnp.int32),
+             jnp.full((nqp,), jnp.inf, jnp.float32),
+             jnp.zeros((nqp,), jnp.int32),
+             jnp.zeros((nqp,), jnp.int32),
+             jnp.full((nqp,), jnp.inf, jnp.float32))
+    nb = blocks["xl"].shape[0]
+    G = max(1, int(block_group))
+    done = 0
+    while done < nb:
+        g = min(G, nb - done)
+        xs_g = {key: v[done:done + g] for key, v in blocks.items()}
+        carry = _anytime_group(state, xs_g, q_lead, q_tail, q_extra, probe,
+                               carry, cfg)
+        done += g
+        # the sync that makes the wall check honest: without it the python
+        # loop races ahead of the async device queue and the deadline only
+        # fires after every group has already been dispatched
+        jax.block_until_ready(carry[0])
+        faults.sleep_block(fp)
+        if time.monotonic() > deadline_ts:
+            break
+    d, i, _, surv, passed, dmin = carry
+    return (d[:nq], i[:nq], surv[:nq], passed[:nq], dmin[:nq], done / nb)
+
+
 def stream_topk(state: dict, q_lead, q_tail, cfg: DcoEngineConfig,
-                q_extra: dict | None = None, probe=None, blocks=None):
+                q_extra: dict | None = None, probe=None, blocks=None,
+                deadline_ts: float | None = None, block_group: int = 8):
     """Streaming top-k over the local corpus for a batch of rotated queries.
 
     q_lead (Q, d1), q_tail (Q, D - d1).  ``state`` is a
@@ -603,6 +688,20 @@ def stream_topk(state: dict, q_lead, q_tail, cfg: DcoEngineConfig,
     the dco_scan stage: the Pallas kernel freezes pruned rows mid-block, so
     its partials cannot be reused by the fallback branch's full completion
     (the pq_lookup path is unaffected).
+
+    ``deadline_ts`` (absolute ``time.monotonic()`` timestamp) arms ANYTIME
+    mode (DESIGN.md §7): the corpus is walked in groups of ``block_group``
+    row blocks, the running carry is synced and the wall clock checked at
+    every group boundary, and on expiry the running top-k is returned as a
+    partial result.  At least one group is always scanned.  The return
+    gains a sixth element, ``coverage`` — the fraction of corpus blocks
+    scanned (1.0 = the full scan, in which case results are bit-identical
+    to the non-deadline path: the grouped scan replays the exact same
+    per-block step sequence).  Queries with ``coverage < 1`` must be
+    treated as UNCERTIFIED regardless of ``dropped_min_est`` (unscanned
+    blocks may hold true neighbors); the facade's ``uncertified_mask``
+    encodes this.  Anytime mode serves the fixed scan only — the backend
+    strips an adaptive policy before a deadline call.
     """
     q_extra = dict(q_extra or {})
     adaptive = _adaptive(cfg)
@@ -631,6 +730,14 @@ def stream_topk(state: dict, q_lead, q_tail, cfg: DcoEngineConfig,
                    for key, v in q_extra.items()}
         if probe is not None:
             probe = jnp.pad(probe, ((0, pad), (0, 0)))
+    if deadline_ts is not None:
+        if adaptive:
+            raise ValueError(
+                "anytime deadlines run the fixed streaming scan — strip the "
+                "adaptive policy from cfg before a deadline call "
+                "(DESIGN.md §7)")
+        return _anytime_topk(state, blocks, q_lead, q_tail, q_extra, probe,
+                             cfg, nq, deadline_ts, block_group)
     if not adaptive:
         d, i, s, p, dm = _stream_topk_padded(state, blocks, q_lead, q_tail,
                                              q_extra, probe, cfg)

@@ -90,9 +90,11 @@ class IVFIndex:
         return np.concatenate(lists) if lists else np.empty(0, np.int64)
 
     def search(self, method, batch: QueryBatch, qi: int, k: int, nprobe: int,
-               *, policy=None):
+               *, policy=None, deadline_ts=None):
         """Probe ``nprobe`` partitions and run the staged DCO scan over their
         concatenated candidates; ``policy`` threads the adaptive fdscan
-        fallback (core.policy) into the scan."""
+        fallback (core.policy) into the scan and ``deadline_ts`` its anytime
+        deadline (DESIGN.md §7; coverage is over probed candidates)."""
         cands = self.probe_ids(batch.Q[qi], nprobe)
-        return scan_topk(method, batch, qi, cands, k, policy=policy)
+        return scan_topk(method, batch, qi, cands, k, policy=policy,
+                         deadline_ts=deadline_ts)

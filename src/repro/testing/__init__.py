@@ -1,0 +1,4 @@
+"""``repro.testing`` — fault-injection harness for chaos tests and the
+robustness benchmark (DESIGN.md §7)."""
+from repro.testing.faults import (FaultError, FaultPlan,  # noqa: F401
+                                  SimulatedCrash, inject)

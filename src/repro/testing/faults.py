@@ -1,0 +1,160 @@
+"""Fault-injection plan for the serving robustness layer (DESIGN.md §7).
+
+The serving stack has three failure modes the paper's instability result
+implies in production: a pathological block that blows the latency budget,
+a device step that dies mid-batch, and a crash that tears the last delta-WAL
+frame.  This module makes all three *injectable* so the chaos tests
+(tests/test_robustness.py, tests/test_wal.py) and the robustness benchmark
+(benchmarks/bench_robustness.py) can drive them deterministically:
+
+    with faults.inject(slow_block_s=0.01):
+        sess.search(Q, 10, deadline_s=0.005)     # deadline now fires
+
+Three injection routes, in precedence order:
+
+1. ``SchedulePolicy(faults=FaultPlan(...))`` — scoped to one session; the
+   backends consult their policy's plan first.
+2. ``faults.inject(...)`` — a context manager that installs a process-global
+   plan (used by tests).
+3. ``REPRO_FAULTS="slow_block_s=0.01,fail_search_after=3"`` — environment
+   variable, parsed once, for injecting into a process you don't own (the CI
+   smoke step).
+
+Hook points (all no-ops when no plan is active):
+
+``sleep_block(plan)``
+    called by both engines between row-block groups — simulates a slow
+    block/host ("Bang for the Buck": identical workloads vary widely across
+    cloud instances), which is what makes deadline expiry testable.
+``check_search(plan)``
+    called at backend ``search()`` entry — raises :class:`FaultError` on the
+    N-th call (0-indexed count AFTER which the next call fails), simulating
+    a device-step exception the serving loop must absorb.
+``torn_frame(plan, buf)``
+    consulted by the delta WAL's ``append`` — returns the byte prefix to
+    actually write and whether to simulate a crash (the writer then raises
+    :class:`SimulatedCrash` after the partial write, modeling power loss
+    mid-frame).  Consumed once per armed plan.
+
+``FaultPlan`` is a frozen dataclass (hashable, safe inside the frozen
+``SchedulePolicy``); mutable runtime counters live module-side and reset
+whenever a new plan is installed via :func:`inject`.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import time
+
+
+class FaultError(RuntimeError):
+    """Injected device-step failure (the harness's stand-in for an XLA/
+    driver error escaping a jitted search call)."""
+
+
+class SimulatedCrash(RuntimeError):
+    """Injected process death mid-WAL-write: the frame on disk is torn and
+    the caller never gets an acknowledgement."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """What to inject.  All fields default to "no fault".
+
+    ``slow_block_s``        sleep this long per scanned block group.
+    ``fail_search_after``   raise ``FaultError`` on search call number N
+                            (0-based; -1 = never).
+    ``torn_frame_keep``     on the next WAL frame write, keep only this
+                            fraction of the frame's bytes (0 <= f < 1) and
+                            raise ``SimulatedCrash``; -1.0 = never.
+    """
+
+    slow_block_s: float = 0.0
+    fail_search_after: int = -1
+    torn_frame_keep: float = -1.0
+
+
+# module-side runtime state: the active global plan and mutable counters
+# (keyed by plan identity so a SchedulePolicy-scoped plan gets its own count)
+_GLOBAL: FaultPlan | None = None
+_COUNTERS: dict = {}
+
+
+def _env_plan() -> FaultPlan | None:
+    spec = os.environ.get("REPRO_FAULTS", "").strip()
+    if not spec:
+        return None
+    kw: dict = {}
+    for item in spec.split(","):
+        key, _, val = item.partition("=")
+        key = key.strip()
+        if key not in FaultPlan.__dataclass_fields__:
+            raise ValueError(f"REPRO_FAULTS: unknown field {key!r}")
+        typ = FaultPlan.__dataclass_fields__[key].type
+        kw[key] = int(val) if "int" in typ else float(val)
+    return FaultPlan(**kw)
+
+
+def active(policy=None) -> FaultPlan | None:
+    """The plan in effect: the policy-scoped plan, else the global/context
+    plan, else the ``REPRO_FAULTS`` environment plan."""
+    plan = getattr(policy, "faults", None)
+    if plan is not None:
+        return plan
+    return _GLOBAL if _GLOBAL is not None else _env_plan()
+
+
+def _reset(plan: FaultPlan) -> None:
+    """Drop every counter keyed to ``plan``'s identity.  Must cover ALL
+    counter kinds: a dataclass freed after its context exits can be
+    re-allocated at the same ``id()``, and a stale key would make the new
+    plan think it already fired."""
+    _COUNTERS.pop(id(plan), None)
+    _COUNTERS.pop(("torn", id(plan)), None)
+
+
+@contextlib.contextmanager
+def inject(**kw):
+    """Install a process-global :class:`FaultPlan` for the ``with`` body
+    (counters reset on entry and the previous plan is restored on exit)."""
+    global _GLOBAL
+    prev = _GLOBAL
+    plan = FaultPlan(**kw)
+    _GLOBAL = plan
+    _reset(plan)
+    try:
+        yield plan
+    finally:
+        _GLOBAL = prev
+        _reset(plan)
+
+
+def sleep_block(plan: FaultPlan | None) -> None:
+    """Engine hook: stall one block group (no-op without a plan)."""
+    if plan is not None and plan.slow_block_s > 0.0:
+        time.sleep(plan.slow_block_s)
+
+
+def check_search(plan: FaultPlan | None) -> None:
+    """Backend hook: raise :class:`FaultError` when this call is the plan's
+    ``fail_search_after``-th search (one failure, then the plan is spent)."""
+    if plan is None or plan.fail_search_after < 0:
+        return
+    n = _COUNTERS.get(id(plan), 0)
+    _COUNTERS[id(plan)] = n + 1
+    if n == plan.fail_search_after:
+        raise FaultError(
+            f"injected device-step failure on search call {n} "
+            f"(FaultPlan.fail_search_after={plan.fail_search_after})")
+
+
+def torn_frame(plan: FaultPlan | None, buf: bytes) -> tuple[bytes, bool]:
+    """WAL hook: (bytes to actually write, crash_after_write).  Tears at
+    most once per plan — later frames write whole again."""
+    if plan is None or plan.torn_frame_keep < 0.0 \
+            or _COUNTERS.get(("torn", id(plan))):
+        return buf, False
+    _COUNTERS[("torn", id(plan))] = True
+    keep = max(0, min(len(buf) - 1, int(len(buf) * plan.torn_frame_keep)))
+    return buf[:keep], True

@@ -1,0 +1,282 @@
+"""Anytime deadlines, overload shedding, and fault injection (DESIGN.md §7).
+
+Three contracts:
+
+1. **Anytime search is a pure generalization**: with a generous deadline the
+   result is bit-identical to the non-deadline path on BOTH backends (the
+   grouped scan replays the exact per-block step sequence).  With a tight
+   deadline it returns the running top-k over a *prefix* of the corpus
+   blocks — coverage < 1, certificate withdrawn, and (at
+   block_capacity == row_block, where the stream scan is exact) the ids are
+   exactly the brute-force top-k of the scanned prefix.
+
+2. **Overload resolves every ticket**: bounded admission sheds, queued
+   budget expiry times out, device faults fail only their batch — and the
+   counters account for every submitted request.
+
+3. **Fault injection is deterministic and scoped** (testing.faults).
+"""
+import numpy as np
+import pytest
+
+from repro.api import SchedulePolicy, open_index
+from repro.core.engine import (EXTRA_COVERAGE, EXTRA_UNCERTIFIED_MASK,
+                               EXTRA_UNCERTIFIED_QUERIES)
+from repro.testing import FaultError, FaultPlan, faults
+
+
+def _data(n=2048, d=24, nq=8, seed=7):
+    rng = np.random.default_rng(seed)
+    return (rng.normal(size=(n, d)).astype(np.float32),
+            rng.normal(size=(nq, d)).astype(np.float32))
+
+
+def _pol(**kw):
+    kw.setdefault("d1", 24)
+    kw.setdefault("query_chunk", 4)
+    kw.setdefault("row_block", 256)
+    kw.setdefault("block_capacity", 256)
+    kw.setdefault("anytime_block_group", 2)
+    return SchedulePolicy(**kw)
+
+
+# ------------------------------------------------- deadline = ∞ identity ----
+@pytest.mark.parametrize("backend", ["host", "jax"])
+@pytest.mark.parametrize("deadline", [1e6, np.inf])
+def test_generous_deadline_is_bit_identical(backend, deadline):
+    X, Q = _data()
+    sess = open_index(X, backend=backend, schedule=_pol())
+    r0 = sess.search(Q, 10)
+    r1 = sess.search(Q, 10, deadline_s=float(deadline))
+    assert np.array_equal(r0.ids, r1.ids)
+    assert np.array_equal(r0.dists, r1.dists)
+    cov = r1.stats.extra[EXTRA_COVERAGE]
+    assert cov.shape == (Q.shape[0],) and (cov == 1.0).all()
+    assert not r1.stats.extra[EXTRA_UNCERTIFIED_MASK].any()
+
+
+@pytest.mark.parametrize("backend", ["host", "jax"])
+def test_generous_deadline_is_bit_identical_ivf(backend):
+    X, Q = _data()
+    sess = open_index(X, index="ivf", backend=backend, schedule=_pol())
+    r0 = sess.search(Q, 10, nprobe=8)
+    r1 = sess.search(Q, 10, nprobe=8, deadline_s=1e6)
+    assert np.array_equal(r0.ids, r1.ids)
+    assert np.array_equal(r0.dists, r1.dists)
+
+
+# ----------------------------------------------------- partial coverage -----
+def test_jax_tight_deadline_partial_prefix():
+    """Expired deadline → coverage < 1, certificate withdrawn, and the ids
+    are EXACTLY the brute-force top-k of the scanned block prefix (the
+    running top-k is exact at block_capacity == row_block)."""
+    X, Q = _data()
+    pol = _pol(anytime_block_group=1)
+    sess = open_index(X, backend="jax", schedule=pol)
+    sess.search(Q, 10)                        # warm the jit cache
+    with faults.inject(slow_block_s=0.05):
+        res = sess.search(Q, 10, deadline_s=0.01)
+    cov = res.stats.extra[EXTRA_COVERAGE]
+    assert (cov < 1.0).all()                  # jax: batch advances together
+    assert (cov > 0.0).all()                  # ... but ≥ 1 group always runs
+    assert res.stats.extra[EXTRA_UNCERTIFIED_MASK].all()
+    assert res.stats.extra[EXTRA_UNCERTIFIED_QUERIES] == 1.0
+    nb = -(-X.shape[0] // pol.row_block)
+    done = round(float(cov[0]) * nb)
+    prefix = X[: done * pol.row_block]
+    d2 = ((Q[:, None] - prefix[None]) ** 2).sum(-1)
+    oracle = np.argsort(d2, 1)[:, :10]
+    for i in range(Q.shape[0]):
+        assert set(res.ids[i].tolist()) == set(oracle[i].tolist())
+
+
+def test_host_tight_deadline_is_per_query():
+    """The host scan serves queries sequentially, so an expiring budget
+    yields full coverage for early queries and zero for the starved tail —
+    and only the starved ones lose their certificate."""
+    X, Q = _data()
+    sess = open_index(X, backend="host", schedule=_pol())
+    with faults.inject(slow_block_s=0.03):
+        res = sess.search(Q, 10, deadline_s=0.04)
+    cov = res.stats.extra[EXTRA_COVERAGE]
+    mask = res.stats.extra[EXTRA_UNCERTIFIED_MASK]
+    assert cov[0] > 0.0                       # first query got real budget
+    assert (cov < 1.0).any()
+    assert (mask == (cov < 1.0)).all()
+    full = cov == 1.0
+    if full.any():                            # served-in-time queries exact
+        d2 = ((Q[full][:, None] - X[None]) ** 2).sum(-1)
+        oracle = np.sort(d2, 1)[:, :10]
+        assert np.allclose(res.dists[full], oracle, rtol=1e-4, atol=1e-4)
+
+
+def test_deadline_rejected_where_meaningless():
+    X, Q = _data(n=512)
+    hnsw = open_index(X, index="hnsw")
+    with pytest.raises(ValueError, match="anytime"):
+        hnsw.search(Q, 5, deadline_s=1.0)
+    sess = open_index(X)
+    with pytest.raises(ValueError, match="deadline_s must be > 0"):
+        sess.search(Q, 5, deadline_s=0.0)
+    with pytest.raises(ValueError, match="deadline_s must be > 0"):
+        sess.search(Q, 5, deadline_s=-1.0)
+
+
+def test_search_rejects_non_finite_queries():
+    X, Q = _data(n=512)
+    sess = open_index(X)
+    bad = Q.copy()
+    bad[2, 5] = np.nan
+    with pytest.raises(ValueError, match="NaN/Inf"):
+        sess.search(bad, 5)
+    bad[2, 5] = np.inf
+    with pytest.raises(ValueError, match="NaN/Inf"):
+        sess.search(bad, 5)
+    with pytest.raises(ValueError, match="numeric"):
+        sess.search(np.array([["a"] * X.shape[1]]), 5)
+
+
+# ------------------------------------------------------------- overload -----
+def _service(X, **kw):
+    sess = open_index(X, backend="host")
+    return sess.serve(slots=4, k=5, **kw)
+
+
+def test_bounded_queue_reject_new():
+    X, Q = _data(n=512)
+    svc = _service(X, max_queue=3, admission="reject")
+    kept = [svc.submit(Q[i % Q.shape[0]], now=0.0) for i in range(3)]
+    turned = [svc.submit(Q[i % Q.shape[0]], now=0.0) for i in range(4)]
+    assert all(r.status == "pending" for r in kept)
+    assert all(r.status == "shed" and r.resolved and not r.done
+               for r in turned)
+    assert svc.pending == 3 and svc.shed == 4
+    done = svc.drain(now=0.0)
+    assert len(done) == 3 and all(r.done for r in done)
+
+
+def test_bounded_queue_shed_oldest():
+    X, Q = _data(n=512)
+    svc = _service(X, max_queue=2, admission="shed_oldest")
+    a = svc.submit(Q[0], now=0.0)
+    b = svc.submit(Q[1], now=0.0)
+    c = svc.submit(Q[2], now=0.0)            # evicts a, not c
+    assert a.status == "shed" and b.status == "pending" \
+        and c.status == "pending"
+    assert svc.pending == 2 and svc.shed == 1
+
+
+def test_queued_timeout_resolves_instead_of_hanging():
+    X, Q = _data(n=512)
+    svc = _service(X, deadline_s=0.5)
+    early = svc.submit(Q[0], now=0.0)
+    late = svc.submit(Q[1], now=0.6)
+    out = svc.step(now=1.0)                  # early expired, late still live
+    assert early.status == "timeout" and early in out
+    assert late.done and late in out
+    assert svc.timeouts == 1 and svc.completed == 1
+
+
+def test_per_request_deadline_overrides_service_default():
+    X, Q = _data(n=512)
+    svc = _service(X, deadline_s=100.0)
+    tight = svc.submit(Q[0], now=0.0, deadline_s=0.1)
+    out = svc.drain(now=5.0)
+    assert tight.status == "timeout" and out == [tight]
+    with pytest.raises(ValueError, match="deadline_s"):
+        svc.submit(Q[0], deadline_s=0.0)
+
+
+def test_submit_rejects_non_finite_query():
+    X, Q = _data(n=512)
+    svc = _service(X)
+    bad = Q[0].copy()
+    bad[3] = np.inf
+    with pytest.raises(ValueError, match="NaN/Inf"):
+        svc.submit(bad)
+    assert svc.pending == 0
+
+
+def test_counters_account_for_every_ticket():
+    """The §7 invariant: submitted == completed + shed + timeouts +
+    failures + pending, through a mix of all outcomes."""
+    X, Q = _data(n=512)
+    svc = _service(X, max_queue=4, admission="reject", deadline_s=1.0)
+    for i in range(8):                        # 4 admitted, 4 shed
+        svc.submit(Q[i % Q.shape[0]], now=0.0)
+    svc.step(now=0.5)                         # serves 4
+    for i in range(3):
+        svc.submit(Q[i], now=10.0)            # fresh, expire 2 below
+    svc.submit(Q[3], now=10.9)
+    svc.step(now=12.0)                        # 3 timeout, 1 served... all 4
+    h = svc.health()
+    assert h["submitted"] == 12
+    assert h["submitted"] == (h["completed"] + h["shed"] + h["timeouts"]
+                              + h["failures"] + h["queue_depth"])
+    assert h["shed"] == 4 and h["timeouts"] >= 3
+    assert h["p99_ewma_s"] is not None and h["p99_ewma_s"] >= 0.0
+
+
+def test_device_fault_fails_batch_not_service():
+    X, Q = _data(n=512)
+    svc = _service(X)
+    with faults.inject(fail_search_after=0):
+        doomed = svc.submit(Q[0])
+        out = svc.step()
+    assert doomed.status == "failed" and doomed in out
+    assert "FaultError" in doomed.error
+    assert svc.failures == 1
+    ok = svc.submit(Q[1])                     # the service keeps serving
+    svc.step()
+    assert ok.done and ok.certified
+
+
+def test_anytime_partial_served_through_service():
+    X, Q = _data()
+    sess = open_index(X, backend="host", schedule=_pol())
+    svc = sess.serve(slots=4, k=5, deadline_s=0.05)
+    with faults.inject(slow_block_s=0.03):
+        reqs = [svc.submit(Q[i]) for i in range(4)]
+        out = svc.drain()
+    served = [r for r in out if r.done]
+    assert served and svc.partials >= 1
+    partial = [r for r in served if r.coverage is not None
+               and r.coverage < 1.0]
+    assert partial and all(r.certified is False for r in partial)
+
+
+# ------------------------------------------------------- fault plumbing -----
+def test_fault_plan_counts_search_calls():
+    plan = FaultPlan(fail_search_after=1)
+    faults.check_search(plan)                 # call 0: fine
+    with pytest.raises(FaultError):
+        faults.check_search(plan)             # call 1: injected failure
+    faults.check_search(plan)                 # spent: fine again
+
+
+def test_fault_env_route(monkeypatch):
+    monkeypatch.setenv("REPRO_FAULTS", "slow_block_s=0.25,fail_search_after=2")
+    plan = faults.active()
+    assert plan == FaultPlan(slow_block_s=0.25, fail_search_after=2)
+    monkeypatch.setenv("REPRO_FAULTS", "bogus_knob=1")
+    with pytest.raises(ValueError, match="bogus_knob"):
+        faults.active()
+
+
+def test_fault_policy_route_takes_precedence():
+    plan = FaultPlan(slow_block_s=0.5)
+    pol = SchedulePolicy(faults=plan)
+    with faults.inject(slow_block_s=0.125):
+        assert faults.active(pol) is plan
+        assert faults.active() == FaultPlan(slow_block_s=0.125)
+    assert faults.active(pol) is plan
+    assert faults.active() is None or isinstance(faults.active(), FaultPlan)
+
+
+def test_torn_frame_tears_at_most_once():
+    plan = FaultPlan(torn_frame_keep=0.5)
+    buf = bytes(range(100))
+    out1, crash1 = faults.torn_frame(plan, buf)
+    assert crash1 and len(out1) == 50
+    out2, crash2 = faults.torn_frame(plan, buf)
+    assert not crash2 and out2 == buf

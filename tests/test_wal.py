@@ -1,0 +1,219 @@
+"""Crash-safe delta WAL (DESIGN.md §7, api.persistence.DeltaWAL).
+
+The contract under test: an insert acknowledged by ``add()`` is on disk
+before ``add()`` returns, so ANY crash after the acknowledgement loses
+nothing; a crash *during* the write tears only a frame whose insert was
+never acknowledged, and the loader drops it with a warning instead of
+crashing.  Replay is idempotent (frames carry the corpus size they were
+logged against), and ``save()`` clears the log because a fresh snapshot
+supersedes every frame.
+"""
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import (DeltaWAL, IndexLoadError, SchedulePolicy,
+                       SearchSession, open_index)
+from repro.api.persistence import wal_path
+from repro.testing import SimulatedCrash, faults
+
+
+def _data(n=600, d=16, seed=3):
+    rng = np.random.default_rng(seed)
+    return (rng.normal(size=(n, d)).astype(np.float32),
+            rng.normal(size=(64, d)).astype(np.float32),
+            rng.normal(size=(6, d)).astype(np.float32))
+
+
+def _snap(tmp_path):
+    return str(tmp_path / "idx.bin")
+
+
+# ------------------------------------------------------------ happy path ----
+def test_save_arms_wal_and_reload_replays(tmp_path):
+    X, extra, Q = _data()
+    p = _snap(tmp_path)
+    sess = open_index(X, path=p)            # build + save: WAL armed
+    assert sess.wal is not None and os.path.exists(wal_path(p))
+    sess.add(extra[:20])
+    sess.add(extra[20:40])
+    re = SearchSession.load(p)
+    assert re.n == sess.n == X.shape[0] + 40
+    a, b = sess.search(Q, 5), re.search(Q, 5)
+    assert np.array_equal(a.ids, b.ids)
+    assert np.array_equal(a.dists, b.dists)
+
+
+def test_kill_after_add_loses_no_acknowledged_insert(tmp_path):
+    """The acceptance scenario: snapshot, acknowledged adds, simulated kill
+    (just drop the session object — the WAL write already happened inside
+    add()), reload; recall vs a brute-force oracle over the FULL corpus
+    must be exactly 1.0."""
+    X, extra, Q = _data()
+    p = _snap(tmp_path)
+    sess = open_index(X, path=p)
+    sess.add(extra)                          # acknowledged
+    del sess                                 # "kill -9": no save() ran
+    re = SearchSession.load(p)
+    full = np.concatenate([X, extra])
+    assert re.n == full.shape[0]
+    res = re.search(Q, 10)
+    d2 = ((Q[:, None] - full[None]) ** 2).sum(-1)
+    oracle = np.argsort(d2, 1)[:, :10]
+    recall = np.mean([len(set(res.ids[i]) & set(oracle[i])) / 10
+                      for i in range(Q.shape[0])])
+    assert recall == 1.0
+
+
+def test_replay_is_idempotent(tmp_path):
+    """Double replay == single replay: loading twice (each load replays)
+    and replaying the armed log against an already-caught-up session both
+    apply nothing new."""
+    X, extra, _ = _data()
+    p = _snap(tmp_path)
+    sess = open_index(X, path=p)
+    sess.add(extra[:16])
+    one = SearchSession.load(p)
+    two = SearchSession.load(p)
+    assert one.n == two.n == X.shape[0] + 16
+    assert one.wal.replay(one) == 0          # explicit second replay: no-op
+    assert one.n == X.shape[0] + 16
+
+
+def test_save_clears_the_log(tmp_path):
+    X, extra, _ = _data()
+    p = _snap(tmp_path)
+    sess = open_index(X, path=p)
+    sess.add(extra[:16])
+    assert os.path.getsize(wal_path(p)) > 0
+    sess.save(p)                             # snapshot absorbs the deltas
+    assert os.path.getsize(wal_path(p)) == 0
+    assert SearchSession.load(p).n == X.shape[0] + 16
+
+
+# ------------------------------------------------------------ torn writes ----
+def test_torn_write_never_acknowledges_and_recovers(tmp_path):
+    X, extra, _ = _data()
+    p = _snap(tmp_path)
+    sess = open_index(X, path=p)
+    sess.add(extra[:10])                     # good frame before the tear
+    with faults.inject(torn_frame_keep=0.5):
+        with pytest.raises(SimulatedCrash):
+            sess.add(extra[10:20])           # never acknowledged
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        re = SearchSession.load(p)
+    assert any("torn" in str(x.message) for x in w)
+    assert re.n == X.shape[0] + 10           # good frame kept, tear dropped
+
+
+@pytest.mark.parametrize("keep", [0.0, 0.1, 0.9])
+def test_torn_tail_any_length_is_dropped(tmp_path, keep):
+    X, extra, _ = _data()
+    p = _snap(tmp_path)
+    sess = open_index(X, path=p)
+    with faults.inject(torn_frame_keep=keep):
+        with pytest.raises(SimulatedCrash):
+            sess.add(extra[:8])
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        re = SearchSession.load(p)
+    assert re.n == X.shape[0]
+
+
+def test_recovery_truncates_so_later_appends_survive(tmp_path):
+    """A torn tail must not poison the log: after a recovering load the
+    next append lands on a frame boundary and survives the next load."""
+    X, extra, _ = _data()
+    p = _snap(tmp_path)
+    sess = open_index(X, path=p)
+    with faults.inject(torn_frame_keep=0.4):
+        with pytest.raises(SimulatedCrash):
+            sess.add(extra[:8])
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        re = SearchSession.load(p)           # truncates the torn tail
+    re.add(extra[8:12])
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        again = SearchSession.load(p)
+        assert not [x for x in w if "torn" in str(x.message)]
+    assert again.n == X.shape[0] + 4
+
+
+def test_corrupt_middle_frame_stops_replay_at_it(tmp_path):
+    """Bit-rot in an earlier frame drops it AND everything after (order
+    matters for n_before bookkeeping) — with a warning, never a crash."""
+    X, extra, _ = _data()
+    p = _snap(tmp_path)
+    sess = open_index(X, path=p)
+    sess.add(extra[:8])
+    sess.add(extra[8:16])
+    wp = wal_path(p)
+    raw = bytearray(open(wp, "rb").read())
+    raw[len(raw) // 2] ^= 0xFF               # flip a bit mid-file
+    open(wp, "wb").write(bytes(raw))
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        re = SearchSession.load(p)
+    assert any("CRC" in str(x.message) or "torn" in str(x.message) for x in w)
+    assert X.shape[0] <= re.n < X.shape[0] + 16
+
+
+# --------------------------------------------------------------- loading ----
+def test_load_errors_are_typed_and_name_the_path(tmp_path):
+    missing = str(tmp_path / "nope.bin")
+    with pytest.raises(IndexLoadError, match="does not exist") as ei:
+        SearchSession.load(missing)
+    assert ei.value.path == missing
+    bad = tmp_path / "bad.bin"
+    bad.write_bytes(b"\x00 this is not a snapshot")
+    with pytest.raises(IndexLoadError, match="not a readable"):
+        SearchSession.load(str(bad))
+    notdict = tmp_path / "notdict.bin"
+    import pickle
+    notdict.write_bytes(pickle.dumps([1, 2, 3]))
+    with pytest.raises(IndexLoadError, match="not a session snapshot"):
+        SearchSession.load(str(notdict))
+
+
+def test_open_index_path_roundtrip_and_ivf(tmp_path):
+    """open_index(path=...) loads snapshot+WAL; works for ivf too (replay
+    runs the real insert path, so partition lists stay consistent)."""
+    X, extra, Q = _data()
+    p = _snap(tmp_path)
+    sess = open_index(X, index="ivf", path=p,
+                      schedule=SchedulePolicy(d1=16))
+    sess.add(extra[:12])
+    re = open_index(path=p)
+    assert re.index_kind == "ivf" and re.n == X.shape[0] + 12
+    assert np.array_equal(sess.search(Q, 5, nprobe=64).ids,
+                          re.search(Q, 5, nprobe=64).ids)
+    with pytest.raises(ValueError, match="pass vectors X"):
+        open_index()
+
+
+def test_wal_without_snapshot_is_inert(tmp_path):
+    """Sessions never tied to a path keep the pre-PR behavior: no log."""
+    X, extra, _ = _data()
+    sess = open_index(X)
+    assert sess.wal is None
+    sess.add(extra[:4])                      # no file side effects
+    assert not os.listdir(tmp_path)
+
+
+def test_frames_roundtrip_unit(tmp_path):
+    """DeltaWAL alone: frames come back in order with exact payloads."""
+    wal = DeltaWAL(tmp_path / "unit.wal")
+    a = np.arange(12, dtype=np.float32).reshape(3, 4)
+    b = -np.ones((2, 4), np.float32)
+    wal.append(a, 100)
+    wal.append(b, 103)
+    frames = wal.frames()
+    assert [f[0] for f in frames] == [100, 103]
+    assert np.array_equal(frames[0][1], a)
+    assert np.array_equal(frames[1][1], b)
+    wal.clear()
+    assert wal.frames() == []
