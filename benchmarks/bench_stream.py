@@ -1,14 +1,18 @@
 """Streaming vs two-stage device engine: controlled N x D x d1 sweep.
 
 Same fitted method, same queries, same facade entrypoint — the only variable
-is ``SchedulePolicy.engine``.  Records QPS, recall, real survivor counts,
-dimension pruning, and the peak estimate-tile footprint (the two-stage
-engine materializes a (query_chunk, N) estimate matrix; the streaming engine
-holds (query_chunk, row_block) + (query_chunk, block_capacity), independent
-of N).  Writes BENCH_kernel.json at the repo root when run as a script.
+is the engine configuration: the legacy ``two_stage`` engine, the row-blocked
+``stream`` engine, and ``pdx`` (the stream engine serving the PDX vertical
+layout, ``dim_groups`` > 1 with per-group early exit; DESIGN.md §8).
+Records QPS, recall, real survivor counts, dimension pruning, the measured
+``dims_read_mean`` (dimensions actually touched per candidate — the direct
+evidence of per-group early exit), and the peak estimate-tile footprint.
+Writes BENCH_kernel.json at the repo root when run as a script; ``--dryrun``
+is the CI smoke (tiny corpus, one cell per engine, no JSON).
 """
 from __future__ import annotations
 
+import argparse
 import json
 import time
 
@@ -16,6 +20,7 @@ import numpy as np
 
 from benchmarks.common import dataset, emit, fmt3, method_for
 from repro.api import SchedulePolicy, SearchSession
+from repro.vecdata import load_dataset
 from repro.vecdata.synthetic import recall_at_k
 
 # (dataset, d1) cells: low-D, moderate-D, high-D, ultra-high-D corpora
@@ -24,26 +29,33 @@ SWEEP = (
     ("wikipedia", 128), ("openai", 128),
 )
 METHODS = ("PDScanning+", "DADE")
+#: engine cell -> SchedulePolicy overrides ("pdx" is the stream engine on the
+#: dimension-grouped vertical layout)
+ENGINES = {"two_stage": {"engine": "two_stage"},
+           "stream": {"engine": "stream"},
+           "pdx": {"engine": "stream", "dim_groups": 4}}
 K, NQ, REPEATS = 10, 32, 5
 
 
 def _policy(engine: str, d1: int) -> SchedulePolicy:
-    return SchedulePolicy(d1=d1, query_chunk=32, capacity=2048, engine=engine)
+    return SchedulePolicy(d1=d1, query_chunk=32, capacity=2048,
+                          **ENGINES[engine])
 
 
-def _run_cell(ds, name: str, d1: int, engine: str) -> dict:
-    m = method_for(ds, name, k=K)
+def _run_cell(ds, name: str, d1: int, engine: str, *, nq=NQ,
+              repeats=REPEATS, k=K) -> dict:
+    m = method_for(ds, name, k=k)
     sess = SearchSession(m, "flat", None, "jax", _policy(engine, d1))
-    Q = ds.Q[:NQ]
-    sess.search(Q, K)                       # compile + materialize
+    Q = ds.Q[:nq]
+    sess.search(Q, k)                       # compile + materialize
     best, res = np.inf, None
-    for _ in range(REPEATS):
+    for _ in range(repeats):
         t0 = time.perf_counter()
-        r = sess.search(Q, K)
+        r = sess.search(Q, k)
         dt = time.perf_counter() - t0
         if dt < best:
             best, res = dt, r
-    gt, _ = ds.ground_truth(K)
+    gt, _ = ds.ground_truth(k)
     chunk = sess.policy.query_chunk
     est_bytes = (4 * chunk * ds.n if engine == "two_stage"
                  else 4 * chunk * (min(sess.policy.row_block, ds.n)
@@ -51,39 +63,56 @@ def _run_cell(ds, name: str, d1: int, engine: str) -> dict:
     return {
         "dataset": ds.name, "n": ds.n, "dim": ds.dim, "d1": d1,
         "method": name, "engine": engine,
-        "qps": NQ / best, "recall": recall_at_k(res.ids, gt[:NQ]),
+        "qps": nq / best, "recall": recall_at_k(res.ids, gt[:nq]),
         "pruning_ratio": res.stats.pruning_ratio,
         "survivors_mean": res.stats.extra.get("survivors_mean"),
         "uncertified_queries": res.stats.extra.get("uncertified_queries"),
+        "dims_read_mean": res.stats.extra.get("dims_read_mean"),
         "estimate_tile_bytes": est_bytes,
     }
 
 
-def main(json_path: str | None = None) -> dict:
-    rows, ratios = [], []
-    for ds_name, d1 in SWEEP:
-        ds = dataset(ds_name)
-        for name in METHODS:
+def main(json_path: str | None = None, *, dryrun: bool = False) -> dict:
+    if dryrun:
+        sweep, methods = ((("sift", 32),), ("PDScanning+",))
+        ds_cache = {"sift": load_dataset("sift", scale=0.12)}   # ~1.2k x 128
+        nq, repeats = 8, 1
+    else:
+        sweep, methods, ds_cache, nq, repeats = SWEEP, METHODS, {}, NQ, REPEATS
+    rows, ratios, ratios_pdx = [], [], []
+    for ds_name, d1 in sweep:
+        ds = ds_cache.get(ds_name) or dataset(ds_name)
+        for name in methods:
             cell = {}
-            for engine in ("two_stage", "stream"):
-                cell[engine] = _run_cell(ds, name, d1, engine)
+            for engine in ENGINES:
+                cell[engine] = _run_cell(ds, name, d1, engine,
+                                         nq=nq, repeats=repeats)
                 rows.append(cell[engine])
             ratio = cell["stream"]["qps"] / cell["two_stage"]["qps"]
+            ratio_pdx = cell["pdx"]["qps"] / cell["stream"]["qps"]
             ratios.append(ratio)
+            ratios_pdx.append(ratio_pdx)
             emit(f"stream/{ds_name}/d1={d1}/{name}",
                  1e6 / cell["stream"]["qps"],
                  qps_stream=f"{cell['stream']['qps']:.1f}",
                  qps_two_stage=f"{cell['two_stage']['qps']:.1f}",
+                 qps_pdx=f"{cell['pdx']['qps']:.1f}",
                  qps_ratio=fmt3(ratio),
+                 qps_ratio_pdx=fmt3(ratio_pdx),
                  recall_stream=fmt3(cell["stream"]["recall"]),
-                 recall_two_stage=fmt3(cell["two_stage"]["recall"]),
+                 recall_pdx=fmt3(cell["pdx"]["recall"]),
+                 dims_read_stream=fmt3(cell["stream"]["dims_read_mean"]),
+                 dims_read_pdx=fmt3(cell["pdx"]["dims_read_mean"]),
                  est_bytes_stream=cell["stream"]["estimate_tile_bytes"],
                  est_bytes_two_stage=cell["two_stage"]["estimate_tile_bytes"])
     out = {
-        "benchmark": "stream-vs-two-stage device engine (CPU jnp block path; "
-                     "controlled: same method state, queries, facade)",
-        "k": K, "nq": NQ, "repeats": REPEATS,
+        "benchmark": "stream-vs-two-stage-vs-pdx device engine (CPU jnp "
+                     "block path; controlled: same method state, queries, "
+                     "facade)",
+        "k": K, "nq": nq, "repeats": repeats,
         "geomean_qps_ratio": float(np.exp(np.mean(np.log(ratios)))),
+        "geomean_qps_ratio_pdx_vs_stream":
+            float(np.exp(np.mean(np.log(ratios_pdx)))),
         "rows": rows,
     }
     if json_path:
@@ -93,6 +122,13 @@ def main(json_path: str | None = None) -> dict:
 
 
 if __name__ == "__main__":
-    result = main("BENCH_kernel.json")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", action="store_true",
+                    help="CI smoke: tiny corpus, one cell per engine, no JSON")
+    args = ap.parse_args()
+    result = main(None if args.dryrun else "BENCH_kernel.json",
+                  dryrun=args.dryrun)
     print(f"# geomean qps ratio (stream / two_stage): "
           f"{result['geomean_qps_ratio']:.3f}")
+    print(f"# geomean qps ratio (pdx / stream): "
+          f"{result['geomean_qps_ratio_pdx_vs_stream']:.3f}")

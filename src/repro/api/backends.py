@@ -17,10 +17,10 @@ import time
 
 import numpy as np
 
-from repro.core.engine import (EXTRA_COVERAGE, EXTRA_EST_SAVED_FLOPS,
-                               EXTRA_FALLBACK_BLOCKS, EXTRA_RULE_TIMELINE,
-                               EXTRA_SCREEN_PASS_MEAN, EXTRA_SURVIVORS_MEAN,
-                               EXTRA_UNCERTIFIED_MASK,
+from repro.core.engine import (EXTRA_COVERAGE, EXTRA_DIMS_READ_MEAN,
+                               EXTRA_EST_SAVED_FLOPS, EXTRA_FALLBACK_BLOCKS,
+                               EXTRA_RULE_TIMELINE, EXTRA_SCREEN_PASS_MEAN,
+                               EXTRA_SURVIVORS_MEAN, EXTRA_UNCERTIFIED_MASK,
                                EXTRA_UNCERTIFIED_QUERIES, QueryBatch,
                                ScanStats, scan_topk)
 from repro.core.policy import PolicyConfig, finalize_adaptive_extra
@@ -115,6 +115,8 @@ class HostBackend:
         stats.extra[EXTRA_UNCERTIFIED_MASK] = coverage < 1.0
         stats.extra[EXTRA_UNCERTIFIED_QUERIES] = float(
             (coverage < 1.0).mean())
+        stats.extra[EXTRA_DIMS_READ_MEAN] = (
+            stats.dims_scanned / max(stats.n_dco, 1))
         finalize_adaptive_extra(stats)
 
 
@@ -157,6 +159,7 @@ class JaxBackend:
         self._dstate = None         # host-side device_state() export
         self._state = None          # jnp arrays (single-device path)
         self._blocks = None         # cached stream-engine corpus layout
+        self._groups = 1            # resolved PDX dim groups of that layout
         self._shard_args = None     # device_put shards (mesh path)
         self._mesh_fns: dict = {}   # cfg -> shard_map fn
         self._list_sizes = None     # IVF partition sizes (probe stats)
@@ -179,6 +182,7 @@ class JaxBackend:
         """Drop materialized device arrays (full re-materialization on the
         next search; ``notify_append`` is the cheaper delta path for adds)."""
         self._dstate = self._state = self._blocks = self._shard_args = None
+        self._groups = 1
         self._list_sizes = None
         self._mesh_fns.clear()
         self._cfg_cache.clear()
@@ -265,7 +269,7 @@ class JaxBackend:
         # within the same block count shares one build/scan trace — without
         # this, each insert changes the input shapes and retraces the jitted
         # build, turning the first post-insert search into a compile stall
-        B = int(self._blocks["xl"].shape[1])
+        B = int(self._blocks["xl"].shape[-2])
         pad = -n_delta % B
         self._delta_tail_min = float((xr[:, d1:] ** 2).sum(1).min())
         row_ids = np.arange(self._n_main, n_total, dtype=np.int32)
@@ -335,6 +339,15 @@ class JaxBackend:
             extra["codes"] = jnp.asarray(codes, jnp.int32)
         self._dstate = dstate
         self._d1 = min(self.policy.d1, D)
+        # PDX vertical layout (DESIGN.md §8): resolve the dim-group count the
+        # streaming scan will run with, so the cached blocks, the engine
+        # config and the delta segment all share ONE layout.  Forced to 1 off
+        # the stream engine and for rules with no partial-distance screen
+        # (the same cases stream_engine._effective_groups collapses).
+        self._groups = 1
+        if (self.mesh is None and self._resolved_engine() == "stream"
+                and dstate["kind"] not in ("fdscan", "opq")):
+            self._groups = max(1, int(self.policy.dim_groups))
         self._n_main = int(self.method.state["N"])
         self.rows_written += self._n_main
         if self.mesh is None:
@@ -361,7 +374,8 @@ class JaxBackend:
         kw = dict(kind=ds["kind"], d1=self._d1, k=k, capacity=p.capacity,
                   query_chunk=p.query_chunk, tau_slack=p.tau_slack,
                   row_block=p.row_block, block_capacity=p.block_capacity,
-                  use_kernel=p.use_kernel)
+                  use_kernel=p.use_kernel, dim_groups=self._groups,
+                  group_capacity=p.group_capacity)
         if ds["kind"] == "adsampling":
             kw["eps0"] = float(ds.get("eps0", 2.1))
         elif ds["kind"] == "ddcres":
@@ -466,7 +480,7 @@ class JaxBackend:
             engine = "stream"       # only the streaming engine serves these
         qe = {key: jnp.asarray(v) for key, v in qe.items()}
         cand_per_q = np.full(nq, N, np.float64)
-        passed = dmin = report = coverage = None
+        passed = dmin = report = coverage = dims_read = None
         n_anchor = 0                # two_stage completes k anchors per query
         if self.mesh is None:
             if engine == "two_stage":
@@ -478,8 +492,9 @@ class JaxBackend:
                 if self._blocks is None:
                     # pad+reshape of the whole corpus happens once per
                     # materialization, not per query batch
-                    self._blocks = build_stream_blocks(self._state,
-                                                       self.policy.row_block)
+                    self._blocks = build_stream_blocks(
+                        self._state, self.policy.row_block,
+                        dim_groups=self._groups)
                 blocks, st = self._blocks, self._state
                 if self.delta_rows:
                     if self._delta_dirty or self._delta_blocks is None:
@@ -512,11 +527,11 @@ class JaxBackend:
             if engine == "two_stage":
                 d, i, surv = out
             elif cfg.policy is not None:
-                d, i, surv, passed, dmin, report = out
+                d, i, surv, passed, dmin, dims_read, report = out
             elif t_end is not None:
-                d, i, surv, passed, dmin, coverage = out
+                d, i, surv, passed, dmin, dims_read, coverage = out
             else:
-                d, i, surv, passed, dmin = out
+                d, i, surv, passed, dmin, dims_read = out
             if coverage is not None:
                 # partial scans only touched this fraction of the corpus:
                 # charge candidate work pro rata so pruning stats stay honest
@@ -558,6 +573,15 @@ class JaxBackend:
             if passed is not None:
                 stats.extra[EXTRA_SCREEN_PASS_MEAN] = float(np.asarray(passed).mean())
             self._certify(stats, d, dmin)
+        if dims_read is not None:
+            # the streaming scan measured its own reads (per-group alive
+            # counts + completed tails, DESIGN.md §8): trust them over the
+            # stage-shaped formula — under PDX early exit the formula
+            # overstates lead reads, under adaptive fallback it understates
+            stats.dims_scanned = float(
+                np.asarray(dims_read, np.float64).sum())
+        stats.extra[EXTRA_DIMS_READ_MEAN] = (
+            stats.dims_scanned / max(stats.n_dco, 1))
         if report is not None:
             stats.extra[EXTRA_FALLBACK_BLOCKS] = float(
                 np.asarray(report["fallback_blocks"]).mean())

@@ -184,7 +184,11 @@ def open_index(X=None, *, index: str = "flat", method: str = "DADE",
     ``method`` is one of the paper's 8 (``repro.api.METHODS``); training-based
     methods (DDCpca/DDCopq) are trained on ``train_queries`` (default: a
     sample of X rows) for ``k=train_k``.  ``schedule`` tunes staging on both
-    backends (default ``backend="host"``); ``mesh`` (jax backend only) shards
+    backends (default ``backend="host"``) — including
+    ``SchedulePolicy(dim_groups=...)``, which switches the jax streaming
+    engine to the PDX vertical layout with per-group early exit and makes
+    the host scan read lower-bound stages incrementally (DESIGN.md §8);
+    ``mesh`` (jax backend only) shards
     the corpus for a distributed global top-k.  ``serving=True`` wraps the
     session in a continuous-batching ``repro.serving.SearchService``
     (``serving_params`` are its knobs) and returns that instead.

@@ -5,10 +5,10 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.engine import (EXTRA_COVERAGE, EXTRA_EST_SAVED_FLOPS,
-                               EXTRA_FALLBACK_BLOCKS, EXTRA_RULE_TIMELINE,
-                               EXTRA_SCREEN_PASS_MEAN, EXTRA_SURVIVORS_MEAN,
-                               EXTRA_UNCERTIFIED_MASK,
+from repro.core.engine import (EXTRA_COVERAGE, EXTRA_DIMS_READ_MEAN,
+                               EXTRA_EST_SAVED_FLOPS, EXTRA_FALLBACK_BLOCKS,
+                               EXTRA_RULE_TIMELINE, EXTRA_SCREEN_PASS_MEAN,
+                               EXTRA_SURVIVORS_MEAN, EXTRA_UNCERTIFIED_MASK,
                                EXTRA_UNCERTIFIED_QUERIES, ScanStats,
                                make_schedule)
 
@@ -50,6 +50,14 @@ STAT_EXTRA_KEYS: dict = {
         "serving.SearchService threads it into per-request results).  All "
         "False on the host path; absent on the legacy two_stage engine, "
         "which has no per-block certificate.",
+    EXTRA_DIMS_READ_MEAN:
+        "Mean dimensions actually touched per candidate row (screening "
+        "reads plus exact-completion tails), the direct evidence that "
+        "early exit is firing — compare against D (no pruning) and the "
+        "schedule's d1/stage dims.  Measured from the scan itself on the "
+        "stream and host paths (per-group/per-stage alive counts, "
+        "DESIGN.md §8); formula-derived on the legacy two_stage engine "
+        "and the mesh path (screen dims + completed tails).",
     EXTRA_COVERAGE:
         "Per-query float32 array: fraction of candidate blocks actually "
         "scanned for query i (anytime search, DESIGN.md §7).  1.0 "
@@ -78,6 +86,20 @@ class SchedulePolicy:
     survivors tail-completed per block per query (must comfortably exceed k;
     the per-block analogue of ``capacity``), ``use_kernel`` routes stage 1
     through the Pallas kernels (None = only on TPU).  See DESIGN.md §4.
+
+    ``dim_groups`` > 1 selects the PDX vertical layout (DESIGN.md §8): each
+    row block stores its lead dims in that many contiguous groups and the
+    streaming scan refines candidates group by group, freezing each one
+    whose running partial crosses the certified tau — with the group-0
+    R-cut's best dropped estimate folded into the exactness certificate, so
+    PDX scans stay certified by construction.  Ignored (forced to 1) for
+    methods without a partial-distance screen (FDScanning, DDCopq), by the
+    two_stage engine, and on the mesh path.  The host backend mirrors it
+    automatically: lower-bound methods screen via incremental
+    ``partial_range`` group reads whenever stages are staged.
+    ``group_capacity`` bounds the candidates each query carries past group 0
+    on the jnp path (0 = auto: max(4*block_capacity, 512)); raise it if
+    ``uncertified_queries`` reports R-cut drops.
 
     ``delta_merge_threshold`` governs the jax backend's LSM-style write path
     (DESIGN.md §6): ``add()`` appends rows to a small delta segment that is
@@ -117,6 +139,8 @@ class SchedulePolicy:
     row_block: int = 4096
     block_capacity: int = 128
     use_kernel: bool | None = None
+    dim_groups: int = 1
+    group_capacity: int = 0
     adaptive: bool = False
     fallback_margin: float = 1.5
     delta_merge_threshold: int = 4096

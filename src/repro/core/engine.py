@@ -30,6 +30,8 @@ EXTRA_RULE_TIMELINE = "rule_timeline"            # adaptive: fallback frac / blo
 EXTRA_UNCERTIFIED_MASK = "uncertified_mask"      # per-query certificate failures
 EXTRA_COVERAGE = "coverage"                      # per-query scanned fraction
                                                  # (anytime search; 1.0 = full)
+EXTRA_DIMS_READ_MEAN = "dims_read_mean"          # dims touched per candidate
+                                                 # (screen + completed tails)
 
 
 def make_schedule(D: int, delta0: int = 32, delta_d: int = 64, max_stages: int = 4):
@@ -158,14 +160,34 @@ def scan_topk(method, batch: QueryBatch, qi: int, cand_ids, k, *,
                     stats.dims_scanned += charged_blk
                 hp.observe(len(ids), int(keep.sum()), charged)
             else:
+                # methods exposing partial_range (pure-partial lower bounds:
+                # PDScanning/+) screen incrementally: each stage reads only
+                # the strided dim group [prev_d, d) and adds it to a carried
+                # partial — the host mirror of the device PDX layout
+                # (DESIGN.md §8).  Same keep decisions (the accumulated
+                # partial IS the stage partial), fewer dims charged.
+                pr_fn = getattr(method, "partial_range", None)
+                acc, prev_d = None, 0
                 for d in stages:
                     if len(alive) == 0:
                         break
-                    keep, charged = method.screen(alive, ctx, qi, max(d, 1), tau_sq)
+                    d_eff = max(d, 1)
+                    if pr_fn is not None:
+                        if d_eff <= prev_d:
+                            continue
+                        part = pr_fn(alive, ctx, qi, prev_d, d_eff)
+                        acc = part if acc is None else acc + part
+                        keep, charged = acc <= tau_sq, float(d_eff - prev_d)
+                        prev_d = d_eff
+                    else:
+                        keep, charged = method.screen(alive, ctx, qi, d_eff,
+                                                      tau_sq)
                     charged_blk += len(alive) * charged
                     if stats is not None:
                         stats.dims_scanned += len(alive) * charged
                     alive = alive[keep]
+                    if acc is not None:
+                        acc = acc[keep]
                 if hp is not None:
                     hp.observe(len(ids), len(alive), charged_blk / len(ids))
         if hp is not None:

@@ -59,6 +59,13 @@ class DcoEngineConfig:
                                     # adaptive fdscan fallback (DESIGN.md §5);
                                     # None = fixed rule (frozen dataclass so
                                     # the config stays jit-static/hashable)
+    dim_groups: int = 1        # PDX vertical layout: contiguous dim groups
+                               # per row block with per-group early exit
+                               # (DESIGN.md §8); 1 = flat row-major layout
+    group_capacity: int = 0    # jnp PDX path: candidates kept per query
+                               # after the group-0 R-cut (0 = auto:
+                               # max(4*block_capacity, 512), clamped to the
+                               # row block)
 
 
 def build_device_state(method_or_arrays, d1: int) -> dict:
@@ -230,8 +237,8 @@ def make_distributed_topk(mesh, cfg: DcoEngineConfig, shard_axes=("data", "model
                  "lead_sq": lead_sq, "tail_sq": tail_sq, **extra_state}
         if engine == "stream":
             from repro.core.stream_engine import stream_topk
-            d, i, surv, _, dmin = stream_topk(state, q_lead, q_tail, cfg,
-                                              q_extra)
+            d, i, surv, _, dmin, _ = stream_topk(state, q_lead, q_tail, cfg,
+                                                 q_extra)
         else:
             d, i, surv = two_stage_topk(state, q_lead, q_tail, cfg, q_extra)
             dmin = jnp.full(d.shape[0], jnp.inf)

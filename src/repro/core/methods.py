@@ -141,6 +141,14 @@ class PDScanning(DCOMethod):
         diff = X[ids, :d] - q[:d]
         return np.einsum("nd,nd->n", diff, diff)
 
+    def partial_range(self, ids, ctx, qi, lo, hi):
+        """Partial ssd over the dim slice [lo, hi) only — the strided group
+        read scan_topk accumulates across stages instead of recomputing the
+        whole prefix per stage (host PDX mirror, DESIGN.md §8)."""
+        X, q = self.state["X"], ctx["Q"][qi]
+        diff = X[ids, lo:hi] - q[lo:hi]
+        return np.einsum("nd,nd->n", diff, diff)
+
     def screen(self, ids, ctx, qi, d, tau_sq):
         """Exact lower-bound test: partial ssd over the leading ``d`` dims."""
         return self._partial(ids, ctx, qi, d) <= tau_sq, d
@@ -172,6 +180,12 @@ class PDScanningPlus(PDScanning):
 
     def _partial(self, ids, ctx, qi, d):
         diff = self.state["Xrot"][ids, :d] - ctx["Qrot"][qi, :d]
+        return np.einsum("nd,nd->n", diff, diff)
+
+    def partial_range(self, ids, ctx, qi, lo, hi):
+        """Partial ssd over the rotated dim slice [lo, hi) — the incremental
+        group read of the host PDX scan (see PDScanning.partial_range)."""
+        diff = self.state["Xrot"][ids, lo:hi] - ctx["Qrot"][qi, lo:hi]
         return np.einsum("nd,nd->n", diff, diff)
 
     def device_state(self):

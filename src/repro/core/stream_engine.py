@@ -39,6 +39,21 @@ dco_scan kernel's block-level early exit turns into skipped matmuls, and
 individual rows of unprobed partitions are masked out of the keep set — a
 device-side IVF probe over the same streamed layout as the flat scan.
 
+PDX vertical layout (``dim_groups`` > 1, DESIGN.md §8): the lead dims of a
+block are partitioned into contiguous dimension GROUPS — ``build_stream_blocks``
+stores (n_blocks, G, block, dg) so each group is a unit-stride plane — and the
+scan becomes progressive refinement: group 0 (the pure screening read) prices
+every candidate row, survivors compact to a per-query top-``group_capacity``
+candidate set whose +1 observer slot folds the best dropped group-0 estimate
+into the exactness certificate, and later groups refine only the compacted
+candidates, freezing each one whose running partial crosses the running tau.
+A partial distance over any dim prefix is a valid lower bound under these
+rules, so per-group freezing never needs a certificate entry; only the two
+capacity cuts (R-cut and completion budget) do, and both are observed.  The
+kernel path (``dco_scan_grouped``) keeps the same per-group freeze semantics
+without the R-cut — dense MXU tiles with ``pl.when`` block skips are the
+better trade on TPU.
+
 On CPU (no TPU) the engine defaults to a jnp block path that is numerically
 identical to the kernel semantics (same per-element arithmetic; the kernel's
 mid-scan freezing only changes partials of rows that are masked anyway), so
@@ -71,6 +86,29 @@ def _round8(v: int) -> int:
     return max(8, -(-v // 8) * 8)
 
 
+def _group_plan(d1: int, groups: int):
+    """Resolve a requested ``dim_groups`` against the screening width: the
+    lead dims split into contiguous groups of ``ceil(d1/G)`` dims (the last
+    group may be ragged; the layout zero-pads it, which adds 0 to every
+    squared-distance partial).  Returns (G, dg, widths) with ``widths`` the
+    logical dim count per group — idempotent, so a delta segment rebuilt
+    from the main layout's group count reproduces the same split."""
+    G = max(1, min(int(groups), int(d1)))
+    dg = -(-d1 // G)
+    G = -(-d1 // dg)
+    widths = tuple(min(dg, d1 - g * dg) for g in range(G))
+    return G, dg, widths
+
+
+def _effective_groups(cfg: DcoEngineConfig) -> int:
+    """PDX group count the engine actually honors: ``fdscan`` has no screen
+    to stage and ``opq`` screens on the PQ adist rather than lead partials,
+    so both force the flat (G=1) layout."""
+    if cfg.kind in ("fdscan", "opq"):
+        return 1
+    return max(1, int(cfg.dim_groups))
+
+
 def _final_scale(cfg: DcoEngineConfig, state: dict, D: int):
     """Per-rule multiplier s such that screening is ``partial * s <= tau``.
     Used for every dim-block of the kernel: intermediate partials only grow,
@@ -96,15 +134,25 @@ def _merge_topk(best_d, best_i, new_d, new_i, k: int):
     return -neg, jnp.take_along_axis(i, pos, axis=1)
 
 
-@functools.partial(jax.jit, static_argnames=("row_block", "full_width"))
+@functools.partial(jax.jit,
+                   static_argnames=("row_block", "full_width", "dim_groups"))
 def build_stream_blocks(state: dict, row_block: int,
-                        full_width: bool = False) -> dict:
+                        full_width: bool = False,
+                        dim_groups: int = 1) -> dict:
     """Pad the corpus to a whole number of row blocks and reshape every
     per-row array to (n_blocks, block, ...).  Pad rows carry id -1.  The
-    layout depends only on the device state and ``row_block``, so callers
-    that search repeatedly (api.backends.JaxBackend) build it ONCE per
-    materialization instead of paying a full-corpus pad copy per query
-    batch (N % row_block != 0 makes ``jnp.pad`` a real O(N*D) copy).
+    layout depends only on the device state, ``row_block`` and
+    ``dim_groups``, so callers that search repeatedly (api.backends
+    .JaxBackend) build it ONCE per materialization instead of paying a
+    full-corpus pad copy per query batch (N % row_block != 0 makes
+    ``jnp.pad`` a real O(N*D) copy).
+
+    ``dim_groups`` > 1 selects the PDX vertical layout (DESIGN.md §8): the
+    lead dims split into contiguous groups per :func:`_group_plan` and
+    ``xl`` becomes (n_blocks, G, block, dg) — dim-group-major, each group a
+    unit-stride (block, dg) plane — with per-group squared norms under
+    ``lsg`` (n_blocks, G, block) next to the flat ``lsq``.  A ragged last
+    group zero-pads, contributing nothing to squared-distance partials.
 
     ``full_width=True`` keeps the block width at ``row_block`` even when the
     segment has fewer rows — required for a delta segment whose blocks are
@@ -133,6 +181,14 @@ def build_stream_blocks(state: dict, row_block: int,
         xs["part"] = rows(state["row_part"].astype(jnp.int32), mode="edge")
     if "codes" in state:        # PQ codes for the opq rule
         xs["codes"] = rows(state["codes"].astype(jnp.int32))
+    if dim_groups > 1:
+        d1 = x_lead.shape[1]
+        G, dg, _ = _group_plan(d1, dim_groups)
+        if G > 1:
+            xp = jnp.pad(x_lead, ((0, pad), (0, G * dg - d1)))
+            xg = jnp.moveaxis(xp.reshape(nb, B, G, dg), 2, 1)
+            xs["xl"] = xg                                   # (nb, G, B, dg)
+            xs["lsg"] = (xg ** 2).sum(-1)                   # (nb, G, B)
     return xs
 
 
@@ -146,9 +202,12 @@ def append_stream_blocks(main: dict, delta_state: dict) -> dict:
     on later batches), which is what makes the LSM-style write path free of
     any cross-segment merge step at query time.  ``delta_state`` must carry
     ``row_ids`` (global ids of the appended rows) and the same optional keys
-    (``row_part``, ``codes``) as the main layout."""
-    B = main["xl"].shape[1]
-    delta = build_stream_blocks(delta_state, B, full_width=True)
+    (``row_part``, ``codes``) as the main layout — and it inherits the
+    main layout's PDX group count (``_group_plan`` is idempotent, so the
+    rebuilt split matches group-for-group)."""
+    B = main["xl"].shape[-2]
+    G = main["xl"].shape[1] if main["xl"].ndim == 4 else 1
+    delta = build_stream_blocks(delta_state, B, full_width=True, dim_groups=G)
     missing = set(main) ^ set(delta)
     if missing:
         raise ValueError(f"delta segment layout keys differ from main: {missing}")
@@ -179,15 +238,16 @@ def _scan_blocks(cfg: DcoEngineConfig, state, xs, ql, qt, qe, pr, B, D,
 
     ``init_carry``/``return_carry`` (fixed, non-adaptive path only) make the
     scan RESUMABLE: the anytime driver (DESIGN.md §7) walks the corpus in
-    block groups, threading the full ``(best_d, best_i, tau, surv, passed)``
-    carry between jit calls so a deadline can interrupt the scan at any
+    block groups, threading the full ``(best_d, best_i, tau, surv, passed,
+    dims)`` carry between jit calls so a deadline can interrupt the scan at any
     group boundary with the running top-k intact.  Resuming over block
     groups replays the exact per-block step sequence of the one-shot scan,
     so an uninterrupted grouped scan is bit-identical to it.
     """
     from repro.core.policy import pass_threshold
     from repro.kernels import ref
-    from repro.kernels.ops import _on_tpu, dco_scan_op, pq_lookup_op
+    from repro.kernels.ops import (_on_tpu, dco_scan_grouped_op, dco_scan_op,
+                                   pq_lookup_op)
 
     c = ql.shape[0]
     k = cfg.k
@@ -213,6 +273,29 @@ def _scan_blocks(cfg: DcoEngineConfig, state, xs, ql, qt, qe, pr, B, D,
         tail_min = state.get("tail_min", state["tail_sq"]).min()
 
     Cp = min(C + 1, B)      # +1 slot observes the best DROPPED estimate
+
+    # ---- PDX vertical layout (DESIGN.md §8) -------------------------------
+    grouped = xs["xl"].ndim == 4
+    Gr = xs["xl"].shape[1] if grouped else 1
+    if grouped:
+        dgp = xs["xl"].shape[-1]
+        gw = tuple(min(dgp, d1 - g * dgp) for g in range(Gr))  # logical dims
+        qlg = jnp.moveaxis(
+            jnp.pad(ql, ((0, 0), (0, Gr * dgp - d1))).reshape(c, Gr, dgp),
+            1, 0)                                              # (Gr, c, dgp)
+        qgsq = (qlg ** 2).sum(-1)                              # (Gr, c)
+        # jnp path: survivors of the group-0 screen compact to the per-query
+        # top-R by estimate before the remaining groups are gathered — the
+        # flop saving that makes progressive refinement pay off without the
+        # kernel's tile-level skip.  R >= C so the completion budget never
+        # tightens; the R-cut has its own observer slot (certificate).
+        R = cfg.group_capacity if cfg.group_capacity > 0 else max(4 * C, 512)
+        R = max(min(R, B), C)
+        Rp = min(R + 1, B)
+        if cfg.use_kernel:
+            scales_g = jnp.full((Gr,), scale, jnp.float32)
+            widths_g = jnp.asarray(gw, jnp.float32)
+            kb_g = dict(block_n=kb["block_n"], block_q=kb["block_q"])
 
     pol = cfg.policy if _adaptive(cfg) else None
     if pol is not None:
@@ -256,14 +339,92 @@ def _scan_blocks(cfg: DcoEngineConfig, state, xs, ql, qt, qe, pr, B, D,
         return (new_d, new_i, new_tau,
                 alive.sum(-1).astype(jnp.int32), dropped)
 
+    def _pdx_screen(blk, tau, tau_k, valid, rowhit):
+        """Grouped progressive screen (PDX vertical layout, DESIGN.md §8).
+
+        Group 0 — the contiguous screening read — prices every candidate
+        row; survivors compact to the per-query top-``R`` by estimate with
+        a +1 observer slot capturing the best estimate the R-cut DROPPED
+        (``dropped0``, folded into the exactness certificate exactly like
+        the completion budget's observer column); the remaining groups
+        refine only the compacted candidates, freezing each one whose
+        running partial crosses the running tau.  Frozen rows need no
+        certificate entry: a partial over any dim prefix is a valid lower
+        bound under these rules, so a row frozen above today's tau can
+        never re-enter a top-k whose tau only tightens."""
+        xg, lsg = blk["xl"], blk["lsg"]               # (G, B, dg), (G, B)
+        ok = valid[None, :] if rowhit is None else (valid[None, :] & rowhit)
+        enter = ok & (tau_k >= 0.0)[:, None]                  # (c, B)
+        contrib0 = jnp.maximum(
+            lsg[0][None, :] - 2.0 * qlg[0] @ xg[0].T
+            + qgsq[0][:, None], 0.0)                          # (c, B)
+        dims_b = enter.sum(-1).astype(jnp.float32) * jnp.float32(gw[0])
+        if cfg.kind == "ddcres":
+            estf = (contrib0 + blk["tsq"][None, :]
+                    + qe["qtail_sq"][:, None] - slack[:, None])
+            alive = (enter & (contrib0 <= tau_k[:, None])
+                     & (estf <= tau[:, None]))
+            rank = estf
+        else:
+            rank = contrib0 * scale
+            alive = enter & (rank <= tau_k[:, None])
+        # R-cut: same masked-observer top_k idiom as _complete_screened
+        score = jnp.where(alive, rank, jnp.inf)
+        neg_s, cand = jax.lax.top_k(-score, Rp)               # (c, R [+1])
+        col = jax.lax.broadcasted_iota(jnp.int32, (1, Rp), 1)
+        dropped0 = -jnp.max(jnp.where(col == R, neg_s, -jnp.inf), -1)
+        aliveR = (neg_s > -jnp.inf) & (col < R)               # (c, Rp)
+        acc = jnp.take_along_axis(contrib0, cand, axis=1)     # (c, Rp)
+        for g in range(1, Gr):
+            if g > 1:   # re-test the partial accumulated through group g-1
+                gate = (acc <= tau_k[:, None] if cfg.kind == "ddcres"
+                        else acc * scale <= tau_k[:, None])
+                aliveR = aliveR & gate
+            dims_b = dims_b + (aliveR.sum(-1).astype(jnp.float32)
+                               * jnp.float32(gw[g]))
+            xc = xg[g][cand]                                  # (c, Rp, dg)
+            contrib = jnp.maximum(
+                lsg[g][cand]
+                - 2.0 * jnp.einsum("cd,crd->cr", qlg[g], xc)
+                + qgsq[g][:, None], 0.0)
+            acc = jnp.where(aliveR, acc + contrib, acc)
+        if cfg.kind == "ddcres":
+            est = (acc + blk["tsq"][cand] + qe["qtail_sq"][:, None]
+                   - slack[:, None])
+            keep = aliveR & (acc <= tau_k[:, None]) & (est <= tau[:, None])
+        else:
+            est = acc * scale
+            keep = aliveR & (est <= tau_k[:, None])
+        return cand, acc, keep, est, dropped0, dims_b
+
+    def _complete_compacted(best_d, best_i, tau, keep, est, acc, cand,
+                            dropped0, blk):
+        """Exact tail completion over the PDX-compacted candidate axis: the
+        same top-``C`` masked-observer compaction as _complete_screened,
+        gathering block rows through ``cand``; the R-cut's observed drop
+        folds into the returned certificate value."""
+        CpR = min(C + 1, Rp)
+        score = jnp.where(keep, est, jnp.inf)
+        neg_s, sel = jax.lax.top_k(-score, CpR)
+        col = jax.lax.broadcasted_iota(jnp.int32, (1, CpR), 1)
+        droppedC = -jnp.max(jnp.where(col == C, neg_s, -jnp.inf), -1)
+        alive = (neg_s > -jnp.inf) & (col < C)
+        rsel = jnp.take_along_axis(cand, sel, axis=1)         # (c, CpR)
+        c_tail = blk["xt"][rsel]                              # (c, CpR, Dt)
+        tail = jnp.maximum(((c_tail - qt[:, None, :]) ** 2).sum(-1), 0.0)
+        exact = jnp.take_along_axis(acc, sel, axis=1) + tail
+        exact = jnp.where(alive, exact, jnp.inf)
+        new_d, new_i = _merge_topk(best_d, best_i, exact, blk["ids"][rsel], k)
+        new_tau = jnp.minimum(tau, new_d[:, -1] * cfg.tau_slack)
+        return (new_d, new_i, new_tau, alive.sum(-1).astype(jnp.int32),
+                jnp.minimum(dropped0, droppedC))
+
     def _complete_all(best_d, best_i, tau, partial, ok, blk):
         # certified fallback: every candidate row is completed exactly over
         # all D dims, so nothing is dropped (dropped = +inf) and the
         # per-query exactness certificate is preserved by construction
-        if partial is None:       # opq screens on adist; lead never computed
-            partial = jnp.maximum(
-                blk["lsq"][None, :] - 2.0 * ql @ blk["xl"].T
-                + (ql ** 2).sum(1)[:, None], 0.0)
+        if partial is None:       # opq / PDX escape: lead recomputed in full
+            partial = _lead_partial(blk)
         exact = partial + jnp.maximum(
             blk["tsq"][None, :] - 2.0 * qt @ blk["xt"].T + qt_sq[:, None], 0.0)
         exact = jnp.where(ok, exact, jnp.inf)
@@ -275,7 +436,7 @@ def _scan_blocks(cfg: DcoEngineConfig, state, xs, ql, qt, qe, pr, B, D,
                 jnp.full((c,), jnp.inf, jnp.float32))
 
     def step(carry, blk):
-        best_d, best_i, tau, surv, passed = carry
+        best_d, best_i, tau, surv, passed, dims = carry
         valid = blk["ids"] >= 0                               # (B,)
         rowhit = None
         tau_k = jnp.full((c,), jnp.inf) if cfg.kind == "fdscan" else tau
@@ -290,6 +451,19 @@ def _scan_blocks(cfg: DcoEngineConfig, state, xs, ql, qt, qe, pr, B, D,
             hit = ((pr >= pmin) & (pr <= pmax)).any(-1)       # (c,)
             tau_k = jnp.where(hit, tau_k, -1.0)
             rowhit = (blk["part"][None, :, None] == pr[:, None, :]).any(-1)
+        okm = valid[None, :] if rowhit is None else (valid[None, :] & rowhit)
+        n_okq = okm.sum(-1).astype(jnp.float32)               # (c,)
+
+        if grouped and not cfg.use_kernel:
+            # PDX progressive refinement on the jnp path (DESIGN.md §8)
+            cand, acc, keepR, estR, dropped0, dims_scr = _pdx_screen(
+                blk, tau, tau_k, valid, rowhit)
+            passed_b = keepR.sum(-1).astype(jnp.int32)
+            new_d, new_i, new_tau, completed, dropped = _complete_compacted(
+                best_d, best_i, tau, keepR, estR, acc, cand, dropped0, blk)
+            dims_b = dims_scr + completed.astype(jnp.float32) * (D - d1)
+            return ((new_d, new_i, new_tau, surv + completed,
+                     passed + passed_b, dims + dims_b), dropped)
 
         passed_b = None
         if cfg.kind == "opq":
@@ -300,19 +474,32 @@ def _scan_blocks(cfg: DcoEngineConfig, state, xs, ql, qt, qe, pr, B, D,
             est = adist.T / cfg.theta                         # (c, B)
             keep = (est <= tau[:, None]) & valid[None, :]
             partial = None
-        elif cfg.use_kernel:
+            dims_scr = n_okq * float(qe["lut"].shape[1])
+        elif cfg.use_kernel and grouped:
             nvalid = valid.sum().astype(jnp.int32)
-            p, kp, cnt = dco_scan_op(blk["xl"], ql, tau_k, scales_arr,
-                                     nvalid, **kb)
+            p, kp, cnt, ad = dco_scan_grouped_op(
+                blk["xl"], qlg, tau_k, scales_g, widths_g, nvalid, **kb_g)
             partial, keep = p.T, kp.T.astype(bool)            # (c, B)
             est = partial * scale
             passed_b = cnt.sum(0)       # the kernel's per-block keep counts
+            dims_scr = ad.sum(0)        # measured dims entered per query
+        elif cfg.use_kernel:
+            nvalid = valid.sum().astype(jnp.int32)
+            p, kp, cnt, ad = dco_scan_op(blk["xl"], ql, tau_k, scales_arr,
+                                         nvalid, **kb)
+            partial, keep = p.T, kp.T.astype(bool)            # (c, B)
+            est = partial * scale
+            passed_b = cnt.sum(0)       # the kernel's per-block keep counts
+            dims_scr = ad.sum(0)        # measured dims entered per query
         else:
             partial = jnp.maximum(
                 blk["lsq"][None, :] - 2.0 * ql @ blk["xl"].T
                 + (ql ** 2).sum(1)[:, None], 0.0)             # (c, B)
             est = partial * scale
             keep = (est <= tau_k[:, None]) & valid[None, :]
+            # flat jnp screen reads all d1 lead dims of every candidate row
+            # of a probed block (tau_k < 0 marks a block the probe skips)
+            dims_scr = jnp.where(tau_k >= 0.0, n_okq, 0.0) * float(d1)
         if cfg.kind == "ddcres":
             # full-distance estimate (core.methods Eq. 7) refines the
             # conservative in-kernel partial screen and drives compaction
@@ -330,20 +517,23 @@ def _scan_blocks(cfg: DcoEngineConfig, state, xs, ql, qt, qe, pr, B, D,
             exact = partial + jnp.maximum(
                 blk["tsq"][None, :] - 2.0 * qt @ blk["xt"].T
                 + qt_sq[:, None], 0.0)
-            ok = valid[None, :] if rowhit is None else (valid[None, :] & rowhit)
+            ok = okm
             exact = jnp.where(ok, exact, jnp.inf)
             new_d, new_i = _merge_topk(
                 best_d, best_i, exact,
                 jnp.broadcast_to(blk["ids"][None, :], (c, B)), k)
             n_done = ok.sum(-1).astype(jnp.int32)
             new_tau = jnp.full((c,), jnp.inf)
-            return ((new_d, new_i, new_tau, surv + n_done, passed + n_done),
+            return ((new_d, new_i, new_tau, surv + n_done, passed + n_done,
+                     dims + n_okq * float(D)),
                     jnp.full((c,), jnp.inf))
 
         new_d, new_i, new_tau, completed, dropped = _complete_screened(
             best_d, best_i, tau, keep, est, partial, blk)
+        comp_w = float(D if cfg.kind == "opq" else D - d1)
+        dims_b = dims_scr + completed.astype(jnp.float32) * comp_w
         return ((new_d, new_i, new_tau, surv + completed,
-                 passed + passed_b), dropped)
+                 passed + passed_b, dims + dims_b), dropped)
 
     # ---- adaptive serving (DESIGN.md §5) ----------------------------------
     # One lax.cond per block whose branches are SELF-CONTAINED (each computes
@@ -358,8 +548,16 @@ def _scan_blocks(cfg: DcoEngineConfig, state, xs, ql, qt, qe, pr, B, D,
     q_okm = jnp.ones((c,), bool) if q_ok is None else q_ok
 
     def _lead_partial(blk):
+        xl = blk["xl"]
+        if xl.ndim == 3:            # PDX grouped layout: sum per-group reads
+            acc = jnp.zeros((c, xl.shape[-2]), jnp.float32)
+            for g in range(Gr):
+                acc = acc + jnp.maximum(
+                    blk["lsg"][g][None, :] - 2.0 * qlg[g] @ xl[g].T
+                    + qgsq[g][:, None], 0.0)
+            return acc
         return jnp.maximum(
-            blk["lsq"][None, :] - 2.0 * ql @ blk["xl"].T
+            blk["lsq"][None, :] - 2.0 * ql @ xl.T
             + (ql ** 2).sum(1)[:, None], 0.0)                 # (c, B)
 
     def _screen_of(partial, blk, tau, ok):
@@ -386,7 +584,7 @@ def _scan_blocks(cfg: DcoEngineConfig, state, xs, ql, qt, qe, pr, B, D,
         # BY CONSTRUCTION — or (b) the running cost model says screening is
         # net-negative (mode, with hysteresis).  The escape recomputes the
         # lead from scratch so the common no-escape path stays fusible.
-        best_d, best_i, tau, surv, passed, ps = carry
+        best_d, best_i, tau, surv, passed, dims, ps = carry
         valid = blk["ids"] >= 0
         rowhit = None
         if pr is not None:
@@ -394,21 +592,51 @@ def _scan_blocks(cfg: DcoEngineConfig, state, xs, ql, qt, qe, pr, B, D,
         ok = (jnp.broadcast_to(valid[None, :], (c, B)) if rowhit is None
               else (valid[None, :] & rowhit))
         n_ok = ok.sum(-1).astype(jnp.int32)
+        nokf = n_ok.astype(jnp.float32)
 
-        partial = None if cfg.kind == "opq" else _lead_partial(blk)
-        est, keep = _screen_of(partial, blk, tau, ok)
-        passed_b = keep.sum(-1).astype(jnp.int32)
-        spill = (q_okm & (passed_b > C)).any()
-        esc = spill | ps["mode"]
-        # both completions live INSIDE the cond so an escaped block (steady
-        # fallback, or a spill) never pays the screened compaction; the
-        # escape reuses the stage-1 partial, which crosses the boundary
-        # anyway as an operand of the screened branch
-        new_d, new_i, new_tau, completed, dropped = jax.lax.cond(
-            esc,
-            lambda: _complete_all(best_d, best_i, tau, partial, ok, blk),
-            lambda: _complete_screened(best_d, best_i, tau, keep, est,
-                                       partial, blk))
+        if grouped:
+            # PDX under the policy: the R-cut joins the spill gate — a cut
+            # that dropped ANY alive row escapes to the exact completion, so
+            # screened blocks still never drop rows and the adaptive scan
+            # stays certified by construction, now per dim group.  The
+            # escape recomputes the full lead (group-aware _lead_partial) so
+            # the common screened path keeps only (c, R) operands across the
+            # cond boundary.
+            tau_ka = (tau + slack - qe["qtail_sq"] - tail_min
+                      if cfg.kind == "ddcres" else tau)
+            cand, acc, keepR, estR, dropped0, dims_scr = _pdx_screen(
+                blk, tau, tau_ka, valid, rowhit)
+            passed_b = keepR.sum(-1).astype(jnp.int32)
+            spill = (q_okm & ((passed_b > C) | ~jnp.isinf(dropped0))).any()
+            esc = spill | ps["mode"]
+            new_d, new_i, new_tau, completed, dropped = jax.lax.cond(
+                esc,
+                lambda: _complete_all(best_d, best_i, tau, None, ok, blk),
+                lambda: _complete_compacted(best_d, best_i, tau, keepR, estR,
+                                            acc, cand, dropped0, blk))
+            dims_b = jnp.where(
+                esc, dims_scr + nokf * float(D),
+                dims_scr + completed.astype(jnp.float32) * float(D - d1))
+        else:
+            partial = None if cfg.kind == "opq" else _lead_partial(blk)
+            est, keep = _screen_of(partial, blk, tau, ok)
+            passed_b = keep.sum(-1).astype(jnp.int32)
+            spill = (q_okm & (passed_b > C)).any()
+            esc = spill | ps["mode"]
+            # both completions live INSIDE the cond so an escaped block
+            # (steady fallback, or a spill) never pays the screened
+            # compaction; the escape reuses the stage-1 partial, which
+            # crosses the boundary anyway as an operand of the screened
+            # branch
+            new_d, new_i, new_tau, completed, dropped = jax.lax.cond(
+                esc,
+                lambda: _complete_all(best_d, best_i, tau, partial, ok, blk),
+                lambda: _complete_screened(best_d, best_i, tau, keep, est,
+                                           partial, blk))
+            dims_b = jnp.where(
+                esc, nokf * (d_screen + d_complete),
+                nokf * d_screen
+                + completed.astype(jnp.float32) * d_complete)
 
         # policy evidence.  A SPILL means screening lost this block
         # outright (it still paid a full completion): full-strength
@@ -445,20 +673,21 @@ def _scan_blocks(cfg: DcoEngineConfig, state, xs, ql, qt, qe, pr, B, D,
             "saved": ps["saved"] + 2.0 * saved_blk,
         }
         return ((new_d, new_i, new_tau, surv + completed, passed + passed_b,
-                 new_ps), (dropped, esc.astype(jnp.float32)))
+                 dims + dims_b, new_ps), (dropped, esc.astype(jnp.float32)))
 
     init = (jnp.full((c, k), jnp.inf, jnp.float32),
             jnp.full((c, k), -1, jnp.int32),
             jnp.full((c,), jnp.inf, jnp.float32),
-            jnp.zeros((c,), jnp.int32), jnp.zeros((c,), jnp.int32))
+            jnp.zeros((c,), jnp.int32), jnp.zeros((c,), jnp.int32),
+            jnp.zeros((c,), jnp.float32))
     if pol is None:
         if init_carry is not None:
             init = init_carry
         carry, dropped = jax.lax.scan(step, init, xs)
         if return_carry:
             return carry, dropped.min(0)
-        d, i, _, surv, passed = carry
-        return d, i, surv, passed, dropped.min(0)
+        d, i, _, surv, passed, dims = carry
+        return d, i, surv, passed, dropped.min(0), dims
 
     nb = xs["xl"].shape[0]
     if init_tau is None:
@@ -479,7 +708,7 @@ def _scan_blocks(cfg: DcoEngineConfig, state, xs, ql, qt, qe, pr, B, D,
         # the switching machinery never enters this graph, so a shifted
         # chunk costs ~a plain full scan plus the seed
         def step_full(carry, blk):
-            best_d, best_i, tau, surv, passed = carry
+            best_d, best_i, tau, surv, passed, dims = carry
             valid = blk["ids"] >= 0
             if pr is None:
                 ok = jnp.broadcast_to(valid[None, :], (c, B))
@@ -495,24 +724,25 @@ def _scan_blocks(cfg: DcoEngineConfig, state, xs, ql, qt, qe, pr, B, D,
                 jnp.broadcast_to(blk["ids"][None, :], (c, B)), k)
             ntau = jnp.minimum(tau, nd[:, -1] * cfg.tau_slack)
             n_ok = ok.sum(-1).astype(jnp.int32)
-            return (nd, ni, ntau, surv + n_ok, passed + n_ok), None
+            return (nd, ni, ntau, surv + n_ok, passed + n_ok,
+                    dims + n_ok.astype(jnp.float32) * float(D)), None
 
-        (d, i, _, surv, passed), _ = jax.lax.scan(step_full, init, xs)
+        (d, i, _, surv, passed, dims), _ = jax.lax.scan(step_full, init, xs)
         report = {"fb": jnp.full((c,), nb, jnp.int32),
                   "saved": jnp.zeros((c,), jnp.float32),
                   "timeline": jnp.ones((nb,), jnp.float32)}
         return (d, i, surv, passed, jnp.full((c,), jnp.inf, jnp.float32),
-                report)
+                dims, report)
 
     ini = init + ({"ewma": init_ewma, "n": init_n,
                    "mode": jnp.asarray(False),
                    "fb": jnp.asarray(0, jnp.int32),
                    "saved": jnp.zeros((c,), jnp.float32)},)
-    (d, i, _, surv, passed, ps), (dropped, modes) = jax.lax.scan(
+    (d, i, _, surv, passed, dims, ps), (dropped, modes) = jax.lax.scan(
         step_adaptive, ini, xs)
     report = {"fb": jnp.broadcast_to(ps["fb"], (c,)),
               "saved": ps["saved"], "timeline": modes}
-    return d, i, surv, passed, dropped.min(0), report
+    return d, i, surv, passed, dropped.min(0), dims, report
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -520,7 +750,7 @@ def _stream_topk_padded(state: dict, xs: dict, q_lead, q_tail, q_extra: dict,
                         probe, cfg: DcoEngineConfig):
     d1 = q_lead.shape[1]
     D = d1 + q_tail.shape[1]
-    B = xs["xl"].shape[1]
+    B = xs["xl"].shape[-2]
     nq = q_lead.shape[0]
     c = min(cfg.query_chunk, nq)
     ql = q_lead.reshape(nq // c, c, -1)
@@ -532,10 +762,11 @@ def _stream_topk_padded(state: dict, xs: dict, q_lead, q_tail, q_extra: dict,
         cql, cqt, cqe, cpr = args
         return _scan_blocks(cfg, state, xs, cql, cqt, cqe, cpr, B, D)
 
-    d, i, surv, passed, dmin = jax.lax.map(one_chunk, (ql, qt, qe, pr))
+    d, i, surv, passed, dmin, dims = jax.lax.map(one_chunk, (ql, qt, qe, pr))
     k = cfg.k
     return (d.reshape(nq, k), i.reshape(nq, k),
-            surv.reshape(nq), passed.reshape(nq), dmin.reshape(nq))
+            surv.reshape(nq), passed.reshape(nq), dmin.reshape(nq),
+            dims.reshape(nq))
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -545,12 +776,13 @@ def _anytime_group(state: dict, xs: dict, q_lead, q_tail, q_extra: dict,
 
     ``carry`` is the whole padded batch's running state —
     ``(best_d (nq,k), best_i (nq,k), tau (nq,), surv (nq,), passed (nq,),
-    dropped_min (nq,))`` — threaded between jit calls by the anytime driver
+    dims (nq,), dropped_min (nq,))`` — threaded between jit calls by the
+    anytime driver
     in :func:`stream_topk` (DESIGN.md §7).  Each call advances every query
     chunk by this group's blocks and returns the updated carry; the group
     boundary is the python-level point where the deadline is checked."""
     D = q_lead.shape[1] + q_tail.shape[1]
-    B = xs["xl"].shape[1]
+    B = xs["xl"].shape[-2]
     nq = q_lead.shape[0]
     c = min(cfg.query_chunk, nq)
     ql = q_lead.reshape(nq // c, c, -1)
@@ -563,8 +795,8 @@ def _anytime_group(state: dict, xs: dict, q_lead, q_tail, q_extra: dict,
     def one_chunk(args):
         cql, cqt, cqe, cpr, ccar = args
         new, dmin_g = _scan_blocks(cfg, state, xs, cql, cqt, cqe, cpr, B, D,
-                                   init_carry=ccar[:5], return_carry=True)
-        return new + (jnp.minimum(ccar[5], dmin_g),)
+                                   init_carry=ccar[:6], return_carry=True)
+        return new + (jnp.minimum(ccar[6], dmin_g),)
 
     out = jax.lax.map(one_chunk, (ql, qt, qe, pr, cc))
     return tuple(a.reshape(nq, *a.shape[2:]) for a in out)
@@ -583,15 +815,28 @@ def _seed_eval(state: dict, xs: dict, q_lead, q_tail, q_extra: dict,
     blocks under the spill gate (k/S * row_block << block_capacity).
     Returns (tau0 (nq,), ewma0 (nq,)).
     """
-    B = xs["xl"].shape[1]
+    B = xs["xl"].shape[-2]
     D = q_lead.shape[1] + q_tail.shape[1]
     S = min(1024, B)
     ql, qt = q_lead, q_tail
     sid = xs["ids"][0, :S]
     svalid = sid[None, :] >= 0
-    lead_s = jnp.maximum(
-        xs["lsq"][0, :S][None, :] - 2.0 * ql @ xs["xl"][0, :S].T
-        + (ql ** 2).sum(1)[:, None], 0.0)
+    xl0 = xs["xl"][0]
+    if xl0.ndim == 3:               # PDX grouped layout (DESIGN.md §8)
+        Gg, dgp = xl0.shape[0], xl0.shape[2]
+        d1 = ql.shape[1]
+        qg = jnp.moveaxis(
+            jnp.pad(ql, ((0, 0), (0, Gg * dgp - d1))).reshape(
+                ql.shape[0], Gg, dgp), 1, 0)
+        lead_s = jnp.zeros((ql.shape[0], S), jnp.float32)
+        for g in range(Gg):
+            lead_s = lead_s + jnp.maximum(
+                xs["lsg"][0][g, :S][None, :] - 2.0 * qg[g] @ xl0[g, :S].T
+                + (qg[g] ** 2).sum(1)[:, None], 0.0)
+    else:
+        lead_s = jnp.maximum(
+            xs["lsq"][0, :S][None, :] - 2.0 * ql @ xl0[:S].T
+            + (ql ** 2).sum(1)[:, None], 0.0)
     ex = lead_s + jnp.maximum(
         xs["tsq"][0, :S][None, :] - 2.0 * qt @ xs["xt"][0, :S].T
         + (qt ** 2).sum(1)[:, None], 0.0)
@@ -617,7 +862,7 @@ def _stream_chunk(state: dict, xs: dict, ql, qt, qe: dict, pr, qv, tau0, ew0,
     """One query chunk through the adaptive engine (forced=True: the
     conditional-free full-scan body for chunks the seed put in fallback)."""
     D = ql.shape[1] + qt.shape[1]
-    B = xs["xl"].shape[1]
+    B = xs["xl"].shape[-2]
     return _scan_blocks(cfg, state, xs, ql, qt, qe, pr, B, D, q_ok=qv,
                         init_tau=tau0, init_ewma=ew0, forced=forced)
 
@@ -627,7 +872,7 @@ def _anytime_topk(state: dict, blocks: dict, q_lead, q_tail, q_extra: dict,
                   block_group: int):
     """Deadline-aware anytime driver (DESIGN.md §7): python loop over block
     groups, one host sync + wall check per group, early exit with the
-    running top-k on expiry.  Returns the 5-tuple of :func:`stream_topk`
+    running top-k on expiry.  Returns the 6-tuple of :func:`stream_topk`
     plus ``coverage`` (fraction of corpus blocks scanned)."""
     from repro.testing import faults
 
@@ -638,6 +883,7 @@ def _anytime_topk(state: dict, blocks: dict, q_lead, q_tail, q_extra: dict,
              jnp.full((nqp,), jnp.inf, jnp.float32),
              jnp.zeros((nqp,), jnp.int32),
              jnp.zeros((nqp,), jnp.int32),
+             jnp.zeros((nqp,), jnp.float32),
              jnp.full((nqp,), jnp.inf, jnp.float32))
     nb = blocks["xl"].shape[0]
     G = max(1, int(block_group))
@@ -655,8 +901,9 @@ def _anytime_topk(state: dict, blocks: dict, q_lead, q_tail, q_extra: dict,
         faults.sleep_block(fp)
         if time.monotonic() > deadline_ts:
             break
-    d, i, _, surv, passed, dmin = carry
-    return (d[:nq], i[:nq], surv[:nq], passed[:nq], dmin[:nq], done / nb)
+    d, i, _, surv, passed, dims, dmin = carry
+    return (d[:nq], i[:nq], surv[:nq], passed[:nq], dmin[:nq], dims[:nq],
+            done / nb)
 
 
 def stream_topk(state: dict, q_lead, q_tail, cfg: DcoEngineConfig,
@@ -669,19 +916,27 @@ def stream_topk(state: dict, q_lead, q_tail, cfg: DcoEngineConfig,
     ``row_ids`` (original ids when rows were permuted), ``row_part`` +
     ``probe`` (Q, nprobe) for IVF probing, and ``codes`` for the opq rule.
     ``blocks`` is an optional pre-built :func:`build_stream_blocks` layout
-    (built here when absent — repeat callers should cache it).  Ragged
-    batches pad to a whole number of query chunks; N need not divide
-    ``cfg.row_block``.  Returns (dists_sq (Q, k), ids (Q, k), survivors (Q,)
-    rows tail-completed, passed (Q,) rows passing the screen,
-    dropped_min_est (Q,) the smallest estimate among screen survivors the
-    per-block completion budget dropped, +inf when nothing was dropped).
+    (built here when absent — repeat callers should cache it; it must have
+    been built with the group count :func:`_effective_groups` resolves for
+    ``cfg``).  Ragged batches pad to a whole number of query chunks; N need
+    not divide ``cfg.row_block``.  Returns (dists_sq (Q, k), ids (Q, k),
+    survivors (Q,) rows tail-completed, passed (Q,) rows passing the screen,
+    dropped_min_est (Q,) the smallest estimate among screen survivors any
+    capacity cut dropped (+inf when nothing was dropped), dims_read (Q,)
+    total dimensions the scan touched for the query — screening reads plus
+    completed tails — the telemetry behind the facade's ``dims_read_mean``).
     ``dropped_min_est[q] > dists_sq[q, k-1]`` CERTIFIES exactness for
     lower-bound rules: every dropped row's lower bound exceeds the returned
     k-th distance, so no true neighbor was truncated.  A failed certificate
     means block_capacity should be raised (or row_block shrunk).
 
+    ``cfg.dim_groups`` > 1 serves the scan from the PDX vertical layout
+    (DESIGN.md §8): per-group progressive refinement with the R-cut's
+    observer folded into ``dropped_min_est``, so the same certificate
+    inequality covers group-level drops.  fdscan and opq force G=1.
+
     When ``cfg.policy`` is an adaptive ``core.policy.PolicyConfig`` the
-    engine serves blocks adaptively (DESIGN.md §5) and appends a sixth
+    engine serves blocks adaptively (DESIGN.md §5) and appends a seventh
     return value, a report dict with per-query ``fallback_blocks`` /
     ``est_saved_flops`` and a per-block ``rule_timeline`` (fraction of query
     chunks served by fdscan).  Adaptive mode forces ``use_kernel=False`` for
@@ -694,7 +949,7 @@ def stream_topk(state: dict, q_lead, q_tail, cfg: DcoEngineConfig,
     row blocks, the running carry is synced and the wall clock checked at
     every group boundary, and on expiry the running top-k is returned as a
     partial result.  At least one group is always scanned.  The return
-    gains a sixth element, ``coverage`` — the fraction of corpus blocks
+    gains a seventh element, ``coverage`` — the fraction of corpus blocks
     scanned (1.0 = the full scan, in which case results are bit-identical
     to the non-deadline path: the grouped scan replays the exact same
     per-block step sequence).  Queries with ``coverage < 1`` must be
@@ -716,8 +971,15 @@ def stream_topk(state: dict, q_lead, q_tail, cfg: DcoEngineConfig,
         from repro.kernels.ops import _on_tpu
         cfg = dataclasses.replace(cfg, use_kernel=False if force_jnp
                                   else _on_tpu())
+    ge = _effective_groups(cfg)
     if blocks is None:
-        blocks = build_stream_blocks(state, cfg.row_block)
+        blocks = build_stream_blocks(state, cfg.row_block, dim_groups=ge)
+    gb = blocks["xl"].shape[1] if blocks["xl"].ndim == 4 else 1
+    gp = _group_plan(q_lead.shape[1], ge)[0] if ge > 1 else 1
+    if gb != gp:
+        raise ValueError(
+            f"cached blocks layout has {gb} dim group(s) but cfg resolves "
+            f"to {gp}: rebuild build_stream_blocks with dim_groups={ge}")
     nq = q_lead.shape[0]
     if nq == 0:
         raise ValueError("stream_topk needs at least one query")
@@ -739,9 +1001,9 @@ def stream_topk(state: dict, q_lead, q_tail, cfg: DcoEngineConfig,
         return _anytime_topk(state, blocks, q_lead, q_tail, q_extra, probe,
                              cfg, nq, deadline_ts, block_group)
     if not adaptive:
-        d, i, s, p, dm = _stream_topk_padded(state, blocks, q_lead, q_tail,
-                                             q_extra, probe, cfg)
-        return d[:nq], i[:nq], s[:nq], p[:nq], dm[:nq]
+        d, i, s, p, dm, dr = _stream_topk_padded(state, blocks, q_lead,
+                                                 q_tail, q_extra, probe, cfg)
+        return d[:nq], i[:nq], s[:nq], p[:nq], dm[:nq], dr[:nq]
 
     # ---- adaptive orchestration (DESIGN.md §5) ----------------------------
     # Per-chunk python dispatch: the seed's pass fraction decides, per query
@@ -782,14 +1044,14 @@ def stream_topk(state: dict, q_lead, q_tail, cfg: DcoEngineConfig,
             None if ew0 is None else ew0[sl],
             cfg, bool(chunk_full[ci])))
     if nchunks == 1:
-        d, i, s, p, dm, rep = outs[0]
+        d, i, s, p, dm, dr, rep = outs[0]
     else:
-        d, i, s, p, dm = (jnp.concatenate([o[j] for o in outs])
-                          for j in range(5))
-        rep = {key: jnp.concatenate([o[5][key] for o in outs])
+        d, i, s, p, dm, dr = (jnp.concatenate([o[j] for o in outs])
+                              for j in range(6))
+        rep = {key: jnp.concatenate([o[6][key] for o in outs])
                for key in ("fb", "saved")}
-        rep["timeline"] = jnp.stack([o[5]["timeline"] for o in outs]).mean(0)
+        rep["timeline"] = jnp.stack([o[6]["timeline"] for o in outs]).mean(0)
     report = {"fallback_blocks": rep["fb"][:nq],
               "est_saved_flops": rep["saved"][:nq],
               "rule_timeline": jnp.atleast_1d(rep["timeline"])}
-    return d[:nq], i[:nq], s[:nq], p[:nq], dm[:nq], report
+    return d[:nq], i[:nq], s[:nq], p[:nq], dm[:nq], dr[:nq], report

@@ -11,6 +11,15 @@ paper's per-vector ``break`` (compute is saved; the HBM->VMEM stream for the
 skipped tile is the price of keeping the pipeline static, which is the right
 trade on TPU where stage-1 is MXU-bound for d1 >= 128).
 
+Two entry points share one kernel body:
+
+  ``dco_scan``          row-major x (N, d1), dim blocks sliced on the fly —
+                        the PR 2 layout;
+  ``dco_scan_grouped``  PDX-style vertical x (G, N, dg) (DESIGN.md §8): each
+                        dim GROUP is a contiguous (N, dg) plane, so the
+                        per-dim-block HBM read is a unit-stride stream even
+                        when candidates freeze between groups.
+
 Outputs, per call:
   partial (N, Q) f32   running partial distances (frozen rows keep the value
                        at which they were pruned);
@@ -18,7 +27,11 @@ Outputs, per call:
                        the row index is < ``nrows`` (padding rows never keep);
   counts  (NB, Q) i32  per-candidate-block keep counts (NB = N / block_n) —
                        what the streaming engine (core.stream_engine) consumes
-                       so no (N, Q) array ever has to leave the block loop.
+                       so no (N, Q) array ever has to leave the block loop;
+  dims    (NB, Q) f32  dimensions actually entered per candidate block: each
+                       dim block adds ``widths[di]`` for every still-alive
+                       valid row — the measured early-exit telemetry behind
+                       the facade's ``dims_read_mean`` stat.
 
 Tile sizes: x tile (BN, BD), q tile (BQ, BD), accumulator (BN, BQ) — all
 MXU-aligned multiples of (8, 128) for f32.
@@ -32,23 +45,33 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(scales_ref, nrows_ref, x_ref, q_ref, tau_ref, out_ref, keep_ref,
-            cnt_ref, *, nd_blocks: int, block_n: int):
+def _kernel(scales_ref, widths_ref, nrows_ref, x_ref, q_ref, tau_ref,
+            out_ref, keep_ref, cnt_ref, dims_ref, *, nd_blocks: int,
+            block_n: int):
     di = pl.program_id(2)
     row0 = pl.program_id(1) * block_n
 
     @pl.when(di == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
+        dims_ref[...] = jnp.zeros_like(dims_ref)
 
     tau = tau_ref[...][None, :]                            # (1, BQ)
     prev_scale = scales_ref[jnp.maximum(di - 1, 0)]
     alive = out_ref[...] * prev_scale <= tau               # frozen rows stay dead
+    row = row0 + jax.lax.broadcasted_iota(jnp.int32, alive.shape, 0)
+    # dims telemetry: every alive valid row 'reads' this dim block's logical
+    # width (0 for shape-padding dim blocks), whether or not the tile-level
+    # skip below saves the matmul — per-row exit is what the stat measures
+    entering = (alive & (row < nrows_ref[0])).astype(jnp.float32)
+    dims_ref[...] += entering.sum(0, keepdims=True) * widths_ref[di]
 
     @pl.when(jnp.any(alive))
     def _compute():
-        xb = x_ref[...]                                    # (BN, BD)
-        qb = q_ref[...]                                    # (BQ, BD)
+        xb = x_ref[...]                                    # (BN, BD) / (1, BN, dg)
+        xb = xb.reshape(xb.shape[-2], xb.shape[-1])
+        qb = q_ref[...]                                    # (BQ, BD) / (1, BQ, dg)
+        qb = qb.reshape(qb.shape[-2], qb.shape[-1])
         contrib = ((xb * xb).sum(1, keepdims=True)
                    - 2.0 * jax.lax.dot_general(
                        xb, qb, (((1,), (1,)), ((), ())),
@@ -60,22 +83,40 @@ def _kernel(scales_ref, nrows_ref, x_ref, q_ref, tau_ref, out_ref, keep_ref,
     @pl.when(di == nd_blocks - 1)
     def _finish():
         est = out_ref[...] * scales_ref[di]
-        row = row0 + jax.lax.broadcasted_iota(jnp.int32, est.shape, 0)
         keep = alive & (est <= tau) & (row < nrows_ref[0])
         keep_ref[...] = keep.astype(jnp.int8)
         cnt_ref[...] = keep.astype(jnp.int32).sum(0, keepdims=True)
 
 
+def _out_shapes(n, nq, nnb):
+    return [
+        jax.ShapeDtypeStruct((n, nq), jnp.float32),
+        jax.ShapeDtypeStruct((n, nq), jnp.int8),
+        jax.ShapeDtypeStruct((nnb, nq), jnp.int32),
+        jax.ShapeDtypeStruct((nnb, nq), jnp.float32),
+    ]
+
+
+def _out_specs(block_n, block_q):
+    return [
+        pl.BlockSpec((block_n, block_q), lambda qi, ni, di: (ni, qi)),
+        pl.BlockSpec((block_n, block_q), lambda qi, ni, di: (ni, qi)),
+        pl.BlockSpec((1, block_q), lambda qi, ni, di: (ni, qi)),
+        pl.BlockSpec((1, block_q), lambda qi, ni, di: (ni, qi)),
+    ]
+
+
 @functools.partial(jax.jit, static_argnames=("block_n", "block_q", "block_d",
                                              "interpret"))
-def dco_scan(x, q, tau, scales, nrows, *, block_n: int = 256,
+def dco_scan(x, q, tau, scales, widths, nrows, *, block_n: int = 256,
              block_q: int = 128, block_d: int = 128, interpret: bool = False):
     """x (N, d1) rotated leading dims; q (Q, d1) rotated queries;
     tau (Q,) squared thresholds; scales (n_dblocks,) estimate multipliers;
-    nrows (1,) i32 count of valid (non-padding) leading rows of x.
-    Returns (partial (N, Q) f32, keep (N, Q) int8, counts (N/block_n, Q) i32).
-    N, Q, d1 must be tile multiples — ``kernels.ops.dco_scan_op`` pads
-    arbitrary shapes."""
+    widths (n_dblocks,) f32 logical dims per dim block (0 for padding
+    blocks); nrows (1,) i32 count of valid (non-padding) leading rows of x.
+    Returns (partial (N, Q) f32, keep (N, Q) int8, counts (N/block_n, Q) i32,
+    dims (N/block_n, Q) f32).  N, Q, d1 must be tile multiples —
+    ``kernels.ops.dco_scan_op`` pads arbitrary shapes."""
     n, d1 = x.shape
     nq = q.shape[0]
     nd = pl.cdiv(d1, block_d)
@@ -87,20 +128,45 @@ def dco_scan(x, q, tau, scales, nrows, *, block_n: int = 256,
         grid=grid,
         in_specs=[
             pl.BlockSpec((scales.shape[0],), lambda qi, ni, di: (0,)),
+            pl.BlockSpec((widths.shape[0],), lambda qi, ni, di: (0,)),
             pl.BlockSpec((1,), lambda qi, ni, di: (0,)),
             pl.BlockSpec((block_n, block_d), lambda qi, ni, di: (ni, di)),
             pl.BlockSpec((block_q, block_d), lambda qi, ni, di: (qi, di)),
             pl.BlockSpec((block_q,), lambda qi, ni, di: (qi,)),
         ],
-        out_specs=[
-            pl.BlockSpec((block_n, block_q), lambda qi, ni, di: (ni, qi)),
-            pl.BlockSpec((block_n, block_q), lambda qi, ni, di: (ni, qi)),
-            pl.BlockSpec((1, block_q), lambda qi, ni, di: (ni, qi)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((n, nq), jnp.float32),
-            jax.ShapeDtypeStruct((n, nq), jnp.int8),
-            jax.ShapeDtypeStruct((nnb, nq), jnp.int32),
-        ],
+        out_specs=_out_specs(block_n, block_q),
+        out_shape=_out_shapes(n, nq, nnb),
         interpret=interpret,
-    )(scales, nrows, x, q, tau)
+    )(scales, widths, nrows, x, q, tau)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_q", "interpret"))
+def dco_scan_grouped(x, q, tau, scales, widths, nrows, *, block_n: int = 256,
+                     block_q: int = 128, interpret: bool = False):
+    """PDX-layout staged scan: x (G, N, dg) vertical corpus (dim group
+    major, each group a contiguous (N, dg) plane), q (G, Q, dg) the queries
+    split the same way.  The grid's innermost axis walks GROUPS, so the
+    per-group freeze/skip semantics are exactly ``dco_scan``'s per-dim-block
+    semantics, but the HBM stream for each group is unit-stride (DESIGN.md
+    §8).  Same outputs as :func:`dco_scan`; N, Q, dg must be tile multiples
+    (``kernels.ops.dco_scan_grouped_op`` pads)."""
+    ng, n, dg = x.shape
+    nq = q.shape[1]
+    nnb = pl.cdiv(n, block_n)
+    grid = (pl.cdiv(nq, block_q), nnb, ng)
+    kernel = functools.partial(_kernel, nd_blocks=ng, block_n=block_n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((scales.shape[0],), lambda qi, ni, di: (0,)),
+            pl.BlockSpec((widths.shape[0],), lambda qi, ni, di: (0,)),
+            pl.BlockSpec((1,), lambda qi, ni, di: (0,)),
+            pl.BlockSpec((1, block_n, dg), lambda qi, ni, di: (di, ni, 0)),
+            pl.BlockSpec((1, block_q, dg), lambda qi, ni, di: (di, qi, 0)),
+            pl.BlockSpec((block_q,), lambda qi, ni, di: (qi,)),
+        ],
+        out_specs=_out_specs(block_n, block_q),
+        out_shape=_out_shapes(n, nq, nnb),
+        interpret=interpret,
+    )(scales, widths, nrows, x, q, tau)

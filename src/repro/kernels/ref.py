@@ -32,6 +32,38 @@ def dco_scan_ref(x, q, tau, scales, block_d: int):
     return acc, alive.astype(jnp.int8)
 
 
+def dco_scan_dims_ref(x, q, tau, scales, block_d: int, block_n: int,
+                      nrows=None):
+    """Oracle for the kernel's per-(row-block, query) ``dims`` output.
+
+    Mirrors the kernel's gating exactly: a (row, query) pair 'enters' dim
+    block b iff its running partial scaled by the PREVIOUS block's scale is
+    still <= tau (so at b=0 a pair enters iff tau >= 0) AND the row index is
+    below ``nrows``; each entering pair charges the block's logical width.
+
+    Returns dims (ceil(N/block_n), Q) f32.
+    """
+    n, d1 = x.shape
+    nq = q.shape[0]
+    nblk = (d1 + block_d - 1) // block_d
+    nb = -(-n // block_n)
+    valid = (jnp.arange(n) < (n if nrows is None else nrows))[:, None]
+    acc = jnp.zeros((n, nq), jnp.float32)
+    dims = jnp.zeros((nb, nq), jnp.float32)
+    for b in range(nblk):
+        lo, hi = b * block_d, min((b + 1) * block_d, d1)
+        prev = scales[max(b - 1, 0)] if b > 0 else 1.0
+        alive = (acc * (prev if b > 0 else 0.0)) <= tau[None, :]
+        entering = (alive & valid).astype(jnp.float32)
+        ep = jnp.pad(entering, ((0, nb * block_n - n), (0, 0)))
+        dims = dims + ep.reshape(nb, block_n, nq).sum(1) * float(hi - lo)
+        xb, qb = x[:, lo:hi], q[:, lo:hi]
+        contrib = ((xb ** 2).sum(1)[:, None] - 2.0 * xb @ qb.T
+                   + (qb ** 2).sum(1)[None, :])
+        acc = jnp.where(alive, acc + jnp.maximum(contrib, 0.0), acc)
+    return dims
+
+
 def block_keep_counts_ref(keep, block_n: int):
     """Oracle for the kernel's per-candidate-block counts output: sum the
     (N, Q) keep mask over row blocks of ``block_n`` (pad rows count 0)."""

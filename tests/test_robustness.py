@@ -90,6 +90,30 @@ def test_jax_tight_deadline_partial_prefix():
         assert set(res.ids[i].tolist()) == set(oracle[i].tolist())
 
 
+def test_pdx_slow_block_deadline_partial_prefix():
+    """PDX layout under the slow-block fault: an expiring deadline must
+    still return the exact brute-force top-k of the scanned block prefix
+    (block_capacity == row_block keeps both the completion budget and the
+    grouped R-cut from dropping anything), with the certificate withdrawn
+    for the unscanned suffix."""
+    X, Q = _data()
+    pol = _pol(d1=16, dim_groups=4, use_kernel=False, anytime_block_group=1)
+    sess = open_index(X, backend="jax", schedule=pol)
+    sess.search(Q, 10)                        # warm the jit cache
+    with faults.inject(slow_block_s=0.05):
+        res = sess.search(Q, 10, deadline_s=0.01)
+    cov = res.stats.extra[EXTRA_COVERAGE]
+    assert (cov < 1.0).all() and (cov > 0.0).all()
+    assert res.stats.extra[EXTRA_UNCERTIFIED_MASK].all()
+    nb = -(-X.shape[0] // pol.row_block)
+    done = round(float(cov[0]) * nb)
+    prefix = X[: done * pol.row_block]
+    d2 = ((Q[:, None] - prefix[None]) ** 2).sum(-1)
+    oracle = np.argsort(d2, 1)[:, :10]
+    for i in range(Q.shape[0]):
+        assert set(res.ids[i].tolist()) == set(oracle[i].tolist())
+
+
 def test_host_tight_deadline_is_per_query():
     """The host scan serves queries sequentially, so an expiring budget
     yields full coverage for early queries and zero for the starved tail —

@@ -51,7 +51,7 @@ def test_stream_bit_identical_to_two_stage_on_exact_rules(kind, sift_small):
     st = build_device_state(m, cfg.d1)
     Q = jnp.asarray(ds.Q[:8]) @ jnp.asarray(m.state["pca"]["W"])
     d0, i0, _ = two_stage_topk(st, Q[:, :cfg.d1], Q[:, cfg.d1:], cfg)
-    d1_, i1, s1, p1, dm1 = stream_topk(st, Q[:, :cfg.d1], Q[:, cfg.d1:], cfg)
+    d1_, i1, s1, p1, dm1, _ = stream_topk(st, Q[:, :cfg.d1], Q[:, cfg.d1:], cfg)
     np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
     np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1_))
     assert (np.asarray(s1) > 0).all() and (np.asarray(p1) >= np.asarray(s1)).all()
@@ -102,9 +102,9 @@ def test_stream_kernel_path_matches_jnp_path(sift_small):
             qe = {"lut": jnp.asarray(np.stack([T.pq_query_lut(pq, q)
                                                for q in Q]))}
         ql, qt = jnp.asarray(Q[:, :48]), jnp.asarray(Q[:, 48:])
-        d0, i0, s0, p0, dm0 = stream_topk(st, ql, qt, cfg, qe)
+        d0, i0, s0, p0, dm0, _ = stream_topk(st, ql, qt, cfg, qe)
         cfgk = dataclasses.replace(cfg, use_kernel=True)
-        d1_, i1, s1, p1, dm1 = stream_topk(st, ql, qt, cfgk, qe)
+        d1_, i1, s1, p1, dm1, _ = stream_topk(st, ql, qt, cfgk, qe)
         np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1)), name
         np.testing.assert_array_equal(np.asarray(p0), np.asarray(p1)), name
 
@@ -131,7 +131,7 @@ def test_stream_corpus_not_multiple_of_row_block(sift_small):
                               row_block=rb, block_capacity=128,
                               use_kernel=False)
         st = build_device_state(m, cfg.d1)
-        d, i, s, p, dm = stream_topk(st, Q[:, :cfg.d1], Q[:, cfg.d1:], cfg)
+        d, i, s, p, dm, _ = stream_topk(st, Q[:, :cfg.d1], Q[:, cfg.d1:], cfg)
         assert (np.asarray(i) >= 0).all() and (np.asarray(i) < ds.n).all()
         assert recall_at_k(np.asarray(i), gt[:8]) == 1.0, rb
 
@@ -147,7 +147,7 @@ def test_stream_k_exceeds_block_capacity(sift_small):
                           row_block=512, block_capacity=16, use_kernel=False)
     st = build_device_state(m, cfg.d1)
     Q = jnp.asarray(ds.Q[:8]) @ jnp.asarray(m.state["pca"]["W"])
-    d, i, s, p, dm = stream_topk(st, Q[:, :cfg.d1], Q[:, cfg.d1:], cfg)
+    d, i, s, p, dm, _ = stream_topk(st, Q[:, :cfg.d1], Q[:, cfg.d1:], cfg)
     assert d.shape == (8, k) and np.isfinite(np.asarray(d)).all()
     assert (np.diff(np.asarray(d), axis=1) >= 0).all()      # sorted ascending
     gt, _ = ds.ground_truth(k)
@@ -180,11 +180,11 @@ def test_stream_truncation_is_certified():
     cfg = DcoEngineConfig(kind="lb", d1=d1, k=k, query_chunk=1,
                           row_block=4096, block_capacity=128,
                           use_kernel=False)
-    d, i, s, p, dm = stream_topk(st, ql, qt, cfg)
+    d, i, s, p, dm, _ = stream_topk(st, ql, qt, cfg)
     assert 300 not in np.asarray(i)[0]                   # NN was truncated...
     assert float(dm[0]) <= float(d[0, -1])               # ...and flagged
     cfg2 = dataclasses.replace(cfg, block_capacity=512)  # budget > decoys
-    d2, i2, s2, p2, dm2 = stream_topk(st, ql, qt, cfg2)
+    d2, i2, s2, p2, dm2, _ = stream_topk(st, ql, qt, cfg2)
     assert np.asarray(i2)[0, 0] == 300 and float(d2[0, 0]) == 4.0
     assert float(dm2[0]) > float(d2[0, -1])              # certified exact
 
