@@ -1,58 +1,68 @@
-"""Serving robustness under Poisson bursts at 1x/2x/4x capacity.
+"""Serving robustness: Poisson overload (§7) and query-drift guardrails (§9).
 
-The §7 question: when offered load exceeds what the device can serve, does
+Two suites over the same serving stack, selected by ``--scenario``:
+
+**overload** — when offered load exceeds what the device can serve, does
 the service degrade *predictably* — bounded queue, bounded accepted-request
 tail latency, every ticket resolved — instead of collapsing into an
-unbounded backlog?  And when a request's budget forces a partial scan, how
-much of the corpus did it actually see and what recall did that buy?
+unbounded backlog?  Calibrate the full-batch service wall on a throwaway
+session, then replay the SAME Poisson arrival sequence (discrete-event,
+measured walls — the bench_serving pattern) at 1x, 2x, and 4x the
+calibrated capacity against a bounded-queue ``SearchService`` with
+per-request deadlines.  Sheds, timeouts, partials, and failures are all
+legitimate outcomes; the accounting invariant (``submitted == completed +
+shed + timeouts + failures``) must hold exactly at every rate, and
+accepted p99 must stay under a structural queue-depth bound.
 
-Method: calibrate the full-batch service wall on a throwaway session, then
-replay the SAME Poisson arrival sequence (discrete-event, measured walls —
-the bench_serving pattern) at 1x, 2x, and 4x the calibrated capacity
-against a bounded-queue ``SearchService`` with per-request deadlines.
-Sheds, timeouts, partials, and failures are all legitimate outcomes; the
-accounting invariant (``submitted == completed + shed + timeouts +
-failures``) must hold exactly at every rate.
-
-Per rate: shed/timeout/partial rates, the coverage distribution of served
-requests (anytime scans report the scanned-block fraction), recall of
-served requests vs the full-corpus oracle ("recall under deadline"), and
-accepted-request p50/p95/p99.  The 4x acceptance: accepted p99 stays under
-a structural bound derived from the queue depth (max wait ≈
-ceil(max_queue/slots)+1 batches + own service), not from luck.
+**drift** — does the guardrail layer (DESIGN.md §9) catch query drift and
+bound the damage?  Four cells over a guarded PDScanning+ session: a
+no-drift *control* (breaker must stay closed; audit overhead vs an
+unguarded twin must stay <= 5% wall at the 1/64 sampling rate) and the
+three ``vecdata.make_drift_scenario`` profiles (*gradual* / *sudden* /
+*recovering*).  Per cell, every batch's served breaker state, drift score,
+and brute-force recall are recorded.  Acceptance: the sudden shift opens
+the breaker within 8 batches; every batch served while the breaker is
+open/half-open (the certified full scan) has recall 1.000; the recovering
+cell re-promotes through half-open canaries; request accounting is exact
+in every cell.
 
 Writes BENCH_robustness.json; ``--dryrun`` is the CI smoke (tiny corpus,
-one overloaded rate, slow-block fault injection to force deadline expiry
-deterministically, no JSON).
+one overloaded rate / the sudden drift cell only, fault injection for
+determinism, no JSON, hard RuntimeError on a failed drift acceptance).
 """
 from __future__ import annotations
 
 import argparse
 import contextlib
+import dataclasses
 import json
 
 import numpy as np
 
 from benchmarks.common import (dataset, emit, fmt3, latency_percentiles,
                                shared_pca)
-from repro.api import SchedulePolicy, SearchSession
+from repro.api import GuardrailConfig, SchedulePolicy, SearchSession
 from repro.core.methods import make_method
 from repro.testing import faults
-from repro.vecdata import load_dataset
+from repro.vecdata import load_dataset, make_drift_scenario, make_ood_queries
 
 K, SLOTS = 10, 16
 NQ_POOL = 64
 MAX_QUEUE = 2 * SLOTS
 RATES = (1.0, 2.0, 4.0)       # offered rate as a multiple of capacity
 SEED = 23
+SCENARIOS = ("overload", "drift", "all")
 
 
-def _build_session(X, pca, *, d1, row_block=4096, block_group=2):
+def _build_session(X, pca, *, d1, row_block=4096, block_group=2,
+                   guardrails=None, block_capacity=128):
     # anytime deadlines run the fixed streaming scan (the backend strips
     # the adaptive policy for deadline calls); a small block_group gives
     # the deadline mid-scan checkpoints even on a small corpus
     pol = SchedulePolicy(d1=d1, query_chunk=SLOTS, row_block=row_block,
-                         anytime_block_group=block_group)
+                         anytime_block_group=block_group,
+                         block_capacity=block_capacity,
+                         guardrails=guardrails)
     m = make_method("PDScanning+", pca=pca).fit(X)
     return SearchSession(m, "flat", None, "jax", pol)
 
@@ -143,24 +153,18 @@ def _rate_row(sess, pool, qidx, arrivals, oracle, deadline_s, steady_s):
     return row
 
 
-def main(json_path: str | None = None, *, dryrun: bool = False) -> dict:
+def _overload_suite(ds, pca, *, dryrun: bool) -> dict:
+    """Poisson bursts at multiples of calibrated capacity (§7)."""
     if dryrun:
-        ds = load_dataset("sift", scale=0.04)       # ~400 x 128
         n_req, d1, rates = 24, 32, (4.0,)
         build = dict(d1=d1, row_block=128, block_group=1)
         chaos = faults.inject(slow_block_s=0.002)   # force deadline expiry
     else:
-        ds = dataset("sift")                        # 30k x 128
         n_req, d1, rates = 128, 64, RATES
         build = dict(d1=d1)
         chaos = contextlib.nullcontext()
-    pca = shared_pca(ds)
     pool = np.ascontiguousarray(ds.Q[:NQ_POOL], np.float32)
-    d2 = ((ds.X ** 2).sum(1)[None, :] - 2.0 * pool @ ds.X.T
-          + (pool ** 2).sum(1)[:, None])
-    row_idx = np.arange(pool.shape[0])[:, None]
-    part = np.argpartition(d2, K - 1, axis=1)[:, :K]
-    oracle = part[row_idx, np.argsort(d2[row_idx, part], axis=1)]
+    oracle = _oracle(ds.X, pool)
 
     sess0 = _build_session(ds.X, pca, **build)
     steady_s = _calibrate(sess0.serve(slots=SLOTS, k=K), pool)
@@ -195,22 +199,11 @@ def main(json_path: str | None = None, *, dryrun: bool = False) -> dict:
                  ok=row["accounting_exact"])
 
     overload = rows[f"{max(rates):g}x"]
-    out = {
-        "benchmark": "serving robustness under Poisson bursts at multiples "
-                     "of calibrated capacity (bounded queue, per-request "
-                     "deadlines, anytime partial results; discrete-event "
-                     "replay of measured service walls)",
-        "dataset": {"name": ds.name, "n": ds.n, "dim": ds.dim},
-        "k": K, "slots": SLOTS, "d1": d1, "max_queue": MAX_QUEUE,
-        "admission": "shed_oldest",
+    return {
+        "d1": d1,
         "calibration": {"steady_step_ms": 1e3 * steady_s,
                         "capacity_qps": capacity_qps,
                         "deadline_ms": 1e3 * deadline_s},
-        "measurement_note":
-            "2-vCPU container: service walls inherit up to +-40% "
-            "run-to-run noise; rates are paired against one calibration "
-            "so the shed/timeout/coverage ORDERING across 1x/2x/4x is the "
-            "signal, absolute walls are not.",
         "accept": {
             "accounting_exact_all_rates": all(
                 r["accounting_exact"] for r in rows.values()),
@@ -227,6 +220,232 @@ def main(json_path: str | None = None, *, dryrun: bool = False) -> dict:
         },
         "rates": rows,
     }
+
+
+# ---------------------------------------------------------------------------
+# drift suite (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def _oracle(X, Q) -> np.ndarray:
+    """Exact top-K ids by brute force, per query batch."""
+    d2 = ((X ** 2).sum(1)[None, :] - 2.0 * Q @ X.T + (Q ** 2).sum(1)[:, None])
+    row = np.arange(Q.shape[0])[:, None]
+    part = np.argpartition(d2, K - 1, axis=1)[:, :K]
+    return part[row, np.argsort(d2[row, part], axis=1)]
+
+
+def _serve_batch(svc, Q, oracle):
+    """Submit one batch, serve one step, return (recall, breaker stats)."""
+    tickets = [svc.submit(q) for q in Q]
+    svc.step()
+    rec = float(np.mean([np.isin(r.ids[:K], oracle[j]).mean()
+                         for j, r in enumerate(tickets)]))
+    st = tickets[0].stats
+    return rec, st
+
+
+def _drift_cell(ds, pca, gcfg, scenario: str, n_batches: int, *,
+                build: dict, severity: float = 1.0) -> dict:
+    """One guarded serving run over a ``make_drift_scenario`` stream."""
+    sess = _build_session(ds.X, pca, guardrails=gcfg, **build)
+    svc = sess.serve(slots=SLOTS, k=K)
+    g = sess.backend.guardrail
+    # warm both jitted paths (screened + demoted/certified) so compile
+    # walls don't masquerade as serving behavior, then reset the breaker
+    warm = np.ascontiguousarray(ds.Q[:SLOTS], np.float32)
+    for _ in range(2):
+        for q in warm:
+            svc.submit(q)
+        svc.drain()
+    g.force_state("open")
+    for q in warm:
+        svc.submit(q)
+    svc.drain()
+    g.force_state("closed")
+    warm_health = svc.health()
+
+    stream = make_drift_scenario(ds.X, SLOTS, n_batches, scenario=scenario,
+                                 severity=severity, seed=SEED)
+    shift = max(1, n_batches // 3)
+    per_batch = []
+    for b, Q in enumerate(stream):
+        rec, st = _serve_batch(svc, Q, _oracle(ds.X, Q))
+        per_batch.append({"batch": b, "recall": rec,
+                          "state": st["breaker_state"],
+                          "drift": st["drift_score"]})
+    h = svc.health()
+    open_recs = [r["recall"] for r in per_batch
+                 if r["state"] in ("open", "half_open")]
+    first_open = next((r["batch"] for r in per_batch if r["state"] == "open"),
+                      None)
+    rep = sess.guardrails()
+    row = {
+        "scenario": scenario,
+        "batches": n_batches,
+        "shift_batch": shift,
+        "first_open_batch": first_open,
+        "opened_within_8": (first_open is not None
+                            and first_open - shift <= 8),
+        "recall_while_open": (float(min(open_recs)) if open_recs else None),
+        "recall_mean_closed": float(np.mean(
+            [r["recall"] for r in per_batch if r["state"] == "closed"])),
+        "demoted_batches": rep["demoted_batches"],
+        "final_state": rep["state"],
+        "transitions": [f"{t['from']}->{t['to']} @b{t['batch']}: "
+                        f"{t['reason']}" for t in rep["transitions"]
+                        if t["reason"] != "forced"],
+        "accounting_exact": (
+            h["submitted"] - warm_health["submitted"]
+            == h["completed"] - warm_health["completed"]),
+        "per_batch": per_batch,
+    }
+    emit(f"robustness/drift/{ds.name}/{scenario}", 0.0,
+         first_open="-" if first_open is None else first_open,
+         open_recall="-" if row["recall_while_open"] is None
+         else fmt3(row["recall_while_open"]),
+         final=row["final_state"], ok=row["accounting_exact"])
+    return row
+
+
+def _control_cell(ds, pca, gcfg, n_batches: int, *, build: dict,
+                  repeats: int = 3) -> dict:
+    """No-drift twin run: guarded vs bare wall, `repeats` windows of one
+    audit period each, median ratio — the measured price of the sentinel +
+    1/64 shadow audits.  Median-of-windows because container timing jitter
+    (2x swings; see verify notes) would otherwise dominate a single-window
+    ratio whose true value is a few percent."""
+    period = max(1, int(np.ceil(gcfg.audit_batch / (SLOTS * gcfg.audit_rate))))
+    sess_g = _build_session(ds.X, pca, guardrails=gcfg, **build)
+    sess_b = _build_session(ds.X, pca, **build)
+    svc_g = sess_g.serve(slots=SLOTS, k=K)
+    svc_b = sess_b.serve(slots=SLOTS, k=K)
+    # in-distribution stream from the same generator the drift cells use
+    total = repeats * n_batches
+    stream = [make_ood_queries(ds.X, SLOTS, severity=0.0, seed=SEED + 1000 * b)
+              for b in range(total + period)]
+    # warm-up: compile both paths AND let the guarded run pass its first
+    # audit (that shadow call's compile must not land in the measurement)
+    g = sess_g.backend.guardrail
+    for svc in (svc_g, svc_b):
+        for Q in stream[:max(2, min(period + 1, len(stream) - total))]:
+            for q in Q:
+                svc.submit(q)
+            svc.drain()
+    if g.audits == 0:       # tiny runs: force the audit path to compile
+        g._audit_acc = float(gcfg.audit_batch)
+        for q in stream[0]:
+            svc_g.submit(q)
+        svc_g.drain()
+    windows = []
+    audits0 = g.audits
+    for rep_i in range(repeats):
+        walls = {"guarded": 0.0, "bare": 0.0}
+        lo = len(stream) - total + rep_i * n_batches
+        for Q in stream[lo:lo + n_batches]:
+            for name, svc in (("guarded", svc_g), ("bare", svc_b)):
+                tickets = [svc.submit(q) for q in Q]
+                svc.step()
+                walls[name] += tickets[0].service_s
+        windows.append(walls["guarded"] / max(walls["bare"], 1e-12) - 1.0)
+    rep = sess_g.guardrails()
+    row = {
+        "batches": n_batches,
+        "repeats": repeats,
+        "audit_period_batches": period,
+        "audits_in_window": g.audits - audits0,
+        "window_overhead_fracs": [float(w) for w in windows],
+        "audit_overhead_frac": float(np.median(windows)),
+        "breaker_stayed_closed": (rep["state"] == "closed"
+                                  and rep["demoted_batches"] <= 1),
+        "drift_score_end": rep["drift_score"],
+    }
+    emit(f"robustness/drift/{ds.name}/control", 0.0,
+         overhead=fmt3(row["audit_overhead_frac"]),
+         audits=row["audits_in_window"],
+         closed=row["breaker_stayed_closed"])
+    return row
+
+
+def _drift_suite(ds, pca, *, dryrun: bool) -> dict:
+    if dryrun:
+        # tiny corpus: the block capacity is cut so severe OOD overflows the
+        # per-block completion budget (the uncertified-evidence route) just
+        # as it does at full scale with the default capacity
+        build = dict(d1=32, row_block=128, block_capacity=16)
+        gcfg = GuardrailConfig(min_dwell=2)
+        n_batches, control_batches = 12, 6
+        cells = ("sudden",)
+    else:
+        build = dict(d1=64)
+        gcfg = GuardrailConfig()
+        n_batches, control_batches = 36, 64
+        cells = ("gradual", "sudden", "recovering")
+    out = {
+        "config": dataclasses.asdict(gcfg),
+        "control": _control_cell(ds, pca, gcfg, control_batches, build=build),
+        "cells": {c: _drift_cell(ds, pca, gcfg, c, n_batches, build=build)
+                  for c in cells},
+    }
+    sudden = out["cells"].get("sudden")
+    recov = out["cells"].get("recovering")
+    out["accept"] = {
+        "control_breaker_stayed_closed":
+            bool(out["control"]["breaker_stayed_closed"]),
+        "control_audit_overhead_le_5pct": (
+            # wall-noise-prone on a 2-vCPU container; the dryrun corpus is
+            # dispatch-dominated, so the overhead gate is full-run only
+            True if dryrun
+            else out["control"]["audit_overhead_frac"] <= 0.05),
+        "sudden_opens_within_8_batches":
+            bool(sudden and sudden["opened_within_8"]),
+        "recall_while_open_1.000": all(
+            c["recall_while_open"] is None or c["recall_while_open"] >= 1.0
+            for c in out["cells"].values()),
+        "recovering_repromotes": (
+            True if recov is None
+            else recov["final_state"] == "closed"),
+        "accounting_exact_all_cells": all(
+            c["accounting_exact"] for c in out["cells"].values()),
+    }
+    return out
+
+
+def main(json_path: str | None = None, *, dryrun: bool = False,
+         scenario: str = "all") -> dict:
+    if scenario not in SCENARIOS:
+        raise ValueError(f"scenario must be one of {SCENARIOS}, got {scenario!r}")
+    if dryrun:
+        ds = load_dataset("sift", scale=0.04)       # ~400 x 128
+    else:
+        ds = dataset("sift")                        # 30k x 128
+    pca = shared_pca(ds)
+    out = {
+        "benchmark": "serving robustness: Poisson overload (bounded queue, "
+                     "deadlines, anytime partials) and query-drift "
+                     "guardrails (sentinel + audits + circuit breaker, "
+                     "DESIGN.md §9)",
+        "dataset": {"name": ds.name, "n": ds.n, "dim": ds.dim},
+        "k": K, "slots": SLOTS, "max_queue": MAX_QUEUE,
+        "admission": "shed_oldest",
+        "measurement_note":
+            "2-vCPU container: service walls inherit up to +-40% "
+            "run-to-run noise; rates are paired against one calibration "
+            "so the shed/timeout/coverage ORDERING across 1x/2x/4x is the "
+            "signal, absolute walls are not.  Drift cells are paired "
+            "guarded-vs-bare for the same reason.",
+        "accept": {},
+    }
+    if scenario in ("overload", "all"):
+        ov = _overload_suite(ds, pca, dryrun=dryrun)
+        out["overload"] = {k: v for k, v in ov.items() if k != "accept"}
+        out["accept"].update(ov["accept"])
+    if scenario in ("drift", "all"):
+        dr = _drift_suite(ds, pca, dryrun=dryrun)
+        out["drift"] = {k: v for k, v in dr.items() if k != "accept"}
+        out["accept"].update(dr["accept"])
+        if dryrun and not all(dr["accept"].values()):
+            raise RuntimeError(
+                f"guardrail drift smoke failed: {dr['accept']}")
     if json_path:
         with open(json_path, "w") as f:
             json.dump(out, f, indent=1)
@@ -236,11 +455,13 @@ def main(json_path: str | None = None, *, dryrun: bool = False) -> dict:
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--dryrun", action="store_true",
-                    help="tiny corpus, 4x only, injected slow blocks, "
-                         "no JSON (CI smoke)")
+                    help="tiny corpus, 4x only / sudden cell only, fault "
+                         "injection, no JSON (CI smoke)")
+    ap.add_argument("--scenario", choices=SCENARIOS, default="all",
+                    help="which suite to run (default: all)")
     args = ap.parse_args()
     if args.dryrun:
-        result = main(dryrun=True)
+        result = main(dryrun=True, scenario=args.scenario)
     else:
-        result = main("BENCH_robustness.json")
+        result = main("BENCH_robustness.json", scenario=args.scenario)
     print(f"# accept: {result['accept']}")

@@ -16,5 +16,7 @@ from repro.api.session import (INDEX_KINDS, METHODS, SearchSession,  # noqa: F40
 from repro.api.types import (STAT_EXTRA_KEYS, SchedulePolicy,  # noqa: F401
                              SearchResult)
 from repro.core.engine import QueryBatch, ScanStats  # noqa: F401
+from repro.core.guardrails import (BREAKER_STATES, Guardrail,  # noqa: F401
+                                   GuardrailConfig)
 from repro.serving.search_service import (SearchRequest,  # noqa: F401
                                           SearchService)

@@ -27,6 +27,28 @@ from repro.core.policy import PolicyConfig, finalize_adaptive_extra
 from repro.testing import faults
 
 
+def _arm_guardrail(method, index_kind: str, policy, backend: str):
+    """Build the per-(method, backend) breaker when the schedule asks for
+    one (DESIGN.md §9).  HNSW walks have no scan-shaped certified fallback
+    to demote to (rejected); ``FDScanning`` already IS the certified full
+    scan, so there is nothing to guard (silently unarmed — documented in
+    docs/methods.md)."""
+    gcfg = getattr(policy, "guardrails", None)
+    if gcfg is None or gcfg is False:
+        return None
+    if index_kind == "hnsw":
+        raise ValueError(
+            "guardrails demote scan-shaped searches (index='flat'/'ivf') to "
+            "a certified full scan; an HNSW graph walk has no such fallback "
+            "(DESIGN.md §9)")
+    if method.name == "FDScanning":
+        return None
+    from repro.core.guardrails import Guardrail, GuardrailConfig
+    if gcfg is True:
+        gcfg = GuardrailConfig()
+    return Guardrail(gcfg, method, backend)
+
+
 class HostBackend:
     """Numpy staged-scan execution over flat / IVF / HNSW candidates."""
 
@@ -41,6 +63,9 @@ class HostBackend:
         # kinds; HNSW graph walks screen tiny per-hop batches with a
         # different cost structure and ignore it
         self._pol = PolicyConfig.from_schedule(policy)
+        # demoted serving: every candidate block completes exactly
+        self._pol_demoted = PolicyConfig(adaptive=True, force_fallback=True)
+        self.guardrail = _arm_guardrail(method, index_kind, policy, "host")
 
     def invalidate(self):
         """No-op: nothing is cached on the host path."""
@@ -61,8 +86,32 @@ class HostBackend:
         candidate blocks, queries past the budget return their running
         top-k, and per-query ``coverage`` (candidate blocks scanned, 1.0 =
         complete) lands in ``stats.extra`` with partial queries flagged in
-        ``uncertified_mask``."""
+        ``uncertified_mask``.
+
+        With ``SchedulePolicy(guardrails=...)`` armed, non-deadline batches
+        route through the breaker (DESIGN.md §9): drift is scored, a
+        sampled audit shadow-runs the certified path, and an OPEN breaker
+        serves the whole batch by the exhaustive certified scan.  Deadline
+        calls bypass the guardrail (anytime partials are already flagged
+        uncertified and must stay deterministic)."""
         faults.check_search(faults.active(self.policy))
+        g = self.guardrail
+        if g is not None and deadline_s is None:
+            return g.run(
+                Q, k,
+                screen=lambda q: self._search(q, k, nprobe=nprobe, ef=ef),
+                certified=lambda q: self._search(q, k, nprobe=nprobe, ef=ef,
+                                                 demoted=True),
+                plan=faults.active(self.policy))
+        return self._search(Q, k, nprobe=nprobe, ef=ef,
+                            deadline_s=deadline_s)
+
+    def _search(self, Q, k: int, *, nprobe: int, ef: int,
+                deadline_s: float | None = None, demoted: bool = False):
+        """The scan itself; ``demoted=True`` serves every candidate block
+        by the exhaustive exact completion (``PolicyConfig(force_fallback)``
+        pins the host policy's fallback mode — the guardrail's certified
+        reference/serving path)."""
         m = self.method
         t_end = None
         if deadline_s is not None:
@@ -72,6 +121,7 @@ class HostBackend:
                     "(index='flat'/'ivf'); an HNSW graph walk has no block "
                     "boundary to stop at (DESIGN.md §7)")
             t_end = time.monotonic() + float(deadline_s)
+        pol = self._pol_demoted if demoted else self._pol
         batch = QueryBatch.create(m, Q, self.policy.stage_dims(m.state["D"]))
         dists = np.empty((len(batch), k), np.float32)
         ids = np.empty((len(batch), k), np.int64)
@@ -80,11 +130,11 @@ class HostBackend:
             if self.index_kind == "flat":
                 if all_ids is None:
                     all_ids = np.arange(m.state["N"])
-                d, i = scan_topk(m, batch, qi, all_ids, k, policy=self._pol,
+                d, i = scan_topk(m, batch, qi, all_ids, k, policy=pol,
                                  deadline_ts=t_end)
             elif self.index_kind == "ivf":
                 d, i = self.index.search(m, batch, qi, k, nprobe,
-                                         policy=self._pol, deadline_ts=t_end)
+                                         policy=pol, deadline_ts=t_end)
             else:                   # hnsw
                 d, i = self.index.search(m, batch, qi, k, max(ef, k))
             n = min(k, len(d))
@@ -151,6 +201,12 @@ class JaxBackend:
                 "the adaptive DCO policy is single-device for now — drop "
                 "SchedulePolicy(adaptive=True) on the mesh path "
                 "(DESIGN.md §5)")
+        if mesh is not None and getattr(policy, "guardrails", None) is not None:
+            raise ValueError(
+                "guardrails are single-device (the breaker's demotion runs "
+                "the streaming engine's forced full-scan body) — drop "
+                "SchedulePolicy(guardrails=...) on the mesh path "
+                "(DESIGN.md §9)")
         self.method = method
         self.index_kind = index_kind
         self.index = index
@@ -163,9 +219,10 @@ class JaxBackend:
         self._shard_args = None     # device_put shards (mesh path)
         self._mesh_fns: dict = {}   # cfg -> shard_map fn
         self._list_sizes = None     # IVF partition sizes (probe stats)
-        self._cfg_cache: dict = {}  # k -> DcoEngineConfig (same object per
-                                    # call so jit static-arg caching stays
-                                    # on the identity fast path)
+        self._cfg_cache: dict = {}  # (k, anytime, demoted) -> DcoEngineConfig
+                                    # (same object per call so jit static-arg
+                                    # caching stays on the identity fast path)
+        self.guardrail = _arm_guardrail(method, index_kind, policy, "jax")
         # ---- LSM-style delta segment (DESIGN.md §6) ----
         self._n_main = 0            # rows in the materialized main layout
         self._delta_parts = np.empty(0, np.int32)   # IVF parts of delta rows
@@ -194,9 +251,11 @@ class JaxBackend:
 
     def _resolved_engine(self) -> str:
         """The engine ``search`` will actually run (opq / IVF probing / the
-        adaptive policy are stream-only); requires a materialized _dstate."""
+        adaptive policy / guardrail demotion are stream-only); requires a
+        materialized _dstate."""
         if (self._dstate["kind"] == "opq" or self.index_kind == "ivf"
-                or PolicyConfig.from_schedule(self.policy) is not None):
+                or PolicyConfig.from_schedule(self.policy) is not None
+                or self.guardrail is not None):
             return "stream"
         return self.policy.engine
 
@@ -365,11 +424,11 @@ class JaxBackend:
                           (xr[:, :d1] ** 2).sum(1), (xr[:, d1:] ** 2).sum(1)))
             self._mesh_extra_state = rule_scalars(dstate, d1)
 
-    def _config(self, k: int, anytime: bool = False):
+    def _config(self, k: int, anytime: bool = False, demoted: bool = False):
         from repro.core.jax_engine import DcoEngineConfig
 
-        if (k, anytime) in self._cfg_cache:
-            return self._cfg_cache[(k, anytime)]
+        if (k, anytime, demoted) in self._cfg_cache:
+            return self._cfg_cache[(k, anytime, demoted)]
         ds, p = self._dstate, self.policy
         kw = dict(kind=ds["kind"], d1=self._d1, k=k, capacity=p.capacity,
                   query_chunk=p.query_chunk, tau_slack=p.tau_slack,
@@ -385,8 +444,14 @@ class JaxBackend:
         elif ds["kind"] == "opq":
             kw["theta"] = float(ds["theta"])
         # fdscan has nothing to fall back to; anytime deadline calls run the
-        # fixed resumable scan (DESIGN.md §7), so they strip the policy too
-        if ds["kind"] != "fdscan" and not anytime:
+        # fixed resumable scan (DESIGN.md §7), so they strip the policy too.
+        # A demoted config (guardrail breaker OPEN / audit reference,
+        # DESIGN.md §9) pins force_fallback: every chunk runs the certified
+        # full-scan body regardless of what the schedule says.
+        if demoted:
+            kw["policy"] = PolicyConfig(adaptive=True, force_fallback=True,
+                                        fallback_margin=p.fallback_margin)
+        elif ds["kind"] != "fdscan" and not anytime:
             kw["policy"] = PolicyConfig.from_schedule(p)
         # resolve use_kernel HERE so the cached config is final: an
         # unresolved None makes stream_topk dataclasses.replace() a fresh
@@ -399,7 +464,7 @@ class JaxBackend:
             from repro.kernels.ops import _on_tpu
             kw["use_kernel"] = _on_tpu()
         cfg = DcoEngineConfig(**kw)
-        self._cfg_cache[(k, anytime)] = cfg
+        self._cfg_cache[(k, anytime, demoted)] = cfg
         return cfg
 
     def _ratio_theta(self, k: int) -> float:
@@ -454,13 +519,36 @@ class JaxBackend:
         budget returns the running top-k, and the scanned fraction lands in
         ``stats.extra["coverage"]`` with partial queries flagged
         uncertified.  Single-device stream engine only (the adaptive policy
-        is stripped for the deadline call; mesh raises)."""
+        is stripped for the deadline call; mesh raises).
+
+        With ``SchedulePolicy(guardrails=...)`` armed, non-deadline batches
+        route through the breaker (DESIGN.md §9): drift is scored, a
+        sampled audit shadow-runs the certified forced full scan, and an
+        OPEN breaker serves the whole batch through it.  Deadline calls
+        bypass the guardrail (anytime partials are already flagged
+        uncertified and must stay deterministic)."""
+        faults.check_search(faults.active(self.policy))
+        g = self.guardrail
+        if g is not None and deadline_s is None:
+            return g.run(
+                Q, k,
+                screen=lambda q: self._search(q, k, nprobe=nprobe, ef=ef),
+                certified=lambda q: self._search(q, k, nprobe=nprobe, ef=ef,
+                                                 demoted=True),
+                plan=faults.active(self.policy))
+        return self._search(Q, k, nprobe=nprobe, ef=ef,
+                            deadline_s=deadline_s)
+
+    def _search(self, Q, k: int, *, nprobe: int, ef: int,
+                deadline_s: float | None = None, demoted: bool = False):
+        """The engine dispatch itself; ``demoted=True`` swaps in the
+        forced-fallback config (every chunk runs the certified full-scan
+        body — the guardrail's reference/serving path, DESIGN.md §9)."""
         import jax
         import jax.numpy as jnp
         from repro.core.jax_engine import make_distributed_topk, two_stage_topk
         from repro.core.stream_engine import stream_topk
 
-        faults.check_search(faults.active(self.policy))
         if self._dstate is None:
             self._materialize()
         t_end = None
@@ -471,7 +559,7 @@ class JaxBackend:
                     "no per-group host sync to check the clock at; "
                     "DESIGN.md §7)")
             t_end = time.monotonic() + float(deadline_s)
-        cfg = self._config(k, anytime=t_end is not None)
+        cfg = self._config(k, anytime=t_end is not None, demoted=demoted)
         ql, qt, qe = self._prep_queries(Q)
         nq, N, D = ql.shape[0], self.method.state["N"], self.method.state["D"]
         engine = self.policy.engine

@@ -4,6 +4,9 @@ The fitted state is plain numpy (method state dicts, index arrays), so a
 single pickle payload round-trips everything the online path needs — fit
 once, serve anywhere.  Device arrays are NOT persisted; the jax backend
 re-materializes them lazily from ``device_state()`` on first search.
+Snapshots carry a crc32 integrity trailer (``b"SNAP" | uint64 len |
+uint32 crc``) verified *before* unpickling, so a bit-rotted or truncated
+file fails loudly as ``IndexLoadError`` instead of unpickling garbage.
 
 Dynamic inserts between snapshots are covered by :class:`DeltaWAL`
 (DESIGN.md §7): a session saved to ``path`` arms an append-only log at
@@ -41,6 +44,14 @@ FORMAT_VERSION = 1
 
 _WAL_MAGIC = b"DWAL"
 _WAL_HEADER = struct.Struct("<II")     # payload length, crc32(payload)
+
+# snapshot integrity trailer, appended AFTER the pickle payload:
+#     payload | b"SNAP" | uint64 payload_len | uint32 crc32(payload)
+# load_session verifies it BEFORE unpickling — a silently bit-rotted or
+# truncated snapshot fails with a named cause instead of unpickling garbage
+# (or worse, unpickling something plausible).
+_SNAP_MAGIC = b"SNAP"
+_SNAP_TRAILER = struct.Struct("<QI")   # payload length, crc32(payload)
 
 
 class IndexLoadError(RuntimeError):
@@ -156,15 +167,29 @@ class DeltaWAL:
         for n_before, rows in frames:
             if n_before < session.n:
                 continue               # snapshot or earlier replay has it
+            if not np.isfinite(rows).all():
+                # a frame that passed CRC but holds NaN/Inf rows was logged
+                # by a writer without add()'s finiteness gate (or corrupted
+                # in a CRC-colliding way): applying it would poison every
+                # distance against those rows, so skip it loudly instead
+                warnings.warn(
+                    f"delta WAL {self.path}: frame logged at n_before="
+                    f"{n_before} contains non-finite rows "
+                    f"({rows.shape[0]} rows); skipping it — re-add the "
+                    "data through SearchSession.add(), which validates",
+                    stacklevel=2)
+                continue
             session._apply_add(rows)
             applied += rows.shape[0]
         return applied
 
 
 def save_session(session, path) -> None:
-    """Pickle a session's fitted method state, index, and policy; then arm
-    the delta WAL at ``path + ".wal"`` (clearing any previous log — this
-    snapshot includes everything) so later ``add()`` calls are crash-safe."""
+    """Pickle a session's fitted method state, index, and policy — with a
+    crc32 integrity trailer so a later load can prove the bytes are the
+    ones written — then arm the delta WAL at ``path + ".wal"`` (clearing
+    any previous log; this snapshot includes everything) so later ``add()``
+    calls are crash-safe."""
     payload = {
         "version": FORMAT_VERSION,
         "method_name": session.method.name,
@@ -175,8 +200,11 @@ def save_session(session, path) -> None:
         "policy": session.policy,
         "backend": session.backend.name,
     }
+    body = pickle.dumps(payload, protocol=pickle.HIGHEST_PROTOCOL)
     with open(path, "wb") as f:
-        pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
+        f.write(body)
+        f.write(_SNAP_MAGIC
+                + _SNAP_TRAILER.pack(len(body), zlib.crc32(body)))
         f.flush()
         os.fsync(f.fileno())
     session.wal = DeltaWAL(wal_path(path))
@@ -192,14 +220,33 @@ def load_session(path, *, backend: str | None = None, mesh=None):
 
     try:
         with open(path, "rb") as f:
-            payload = pickle.load(f)
+            data = f.read()
     except FileNotFoundError:
         raise IndexLoadError(path, "file does not exist") from None
+    # verify the integrity trailer BEFORE unpickling: unpickling corrupt
+    # bytes can fail arbitrarily late (or succeed with silently wrong
+    # arrays), while the crc32 check is cheap and total
+    tlen = len(_SNAP_MAGIC) + _SNAP_TRAILER.size
+    if len(data) < tlen or \
+            data[-tlen:-_SNAP_TRAILER.size] != _SNAP_MAGIC:
+        raise IndexLoadError(
+            path, "missing integrity trailer (truncated snapshot, or not "
+            "written by save_session)")
+    ln, crc = _SNAP_TRAILER.unpack(data[-_SNAP_TRAILER.size:])
+    body = data[:-tlen]
+    if ln != len(body) or zlib.crc32(body) != crc:
+        raise IndexLoadError(
+            path, f"snapshot checksum mismatch (trailer says {ln} payload "
+            f"bytes, crc32 {crc:#010x}; file holds {len(body)} bytes, "
+            f"crc32 {zlib.crc32(body):#010x}) — the snapshot was corrupted "
+            "after it was written; restore from a good copy")
+    try:
+        payload = pickle.loads(body)
     except (pickle.UnpicklingError, EOFError, AttributeError,
             ImportError, IndexError) as exc:
         raise IndexLoadError(
-            path, f"not a readable session snapshot (truncated or foreign "
-            f"file? unpickling failed with {type(exc).__name__}: {exc})",
+            path, f"not a readable session snapshot (foreign file? "
+            f"unpickling failed with {type(exc).__name__}: {exc})",
         ) from exc
     if not isinstance(payload, dict) or "method_name" not in payload:
         raise IndexLoadError(

@@ -122,6 +122,13 @@ class SearchSession:
                 f"add(): vectors have dimension {Xnew.shape[1]}, but this "
                 f"index was built with D={self.dim}")
         Xnew = np.ascontiguousarray(Xnew, np.float32)
+        if not np.isfinite(Xnew).all():
+            bad = int((~np.isfinite(Xnew).all(axis=1)).sum())
+            raise ValueError(
+                f"add(): {bad} of {Xnew.shape[0]} rows contain NaN/Inf "
+                "values; a non-finite corpus row poisons every distance "
+                "computed against it (and the streaming engine's running "
+                "tau), so it is rejected before any state or WAL write")
         if self.wal is not None:
             from repro.testing import faults
             self.wal.append(Xnew, self.n, plan=faults.active(self.policy))
@@ -145,6 +152,15 @@ class SearchSession:
         self.last_write_mode = self.backend.notify_append(
             Xnew.shape[0], parts=parts)
         return self
+
+    def guardrails(self) -> dict | None:
+        """Guardrail snapshot (DESIGN.md §9) when the session was opened
+        with ``SchedulePolicy(guardrails=...)``: breaker state, drift/audit
+        EWMAs, audit counters, and the transition log.  ``None`` when no
+        guardrail is armed (including FDScanning sessions, which are
+        already the certified fallback)."""
+        g = getattr(self.backend, "guardrail", None)
+        return None if g is None else g.report()
 
     def serve(self, **kwargs) -> "SearchService":
         """Wrap this session in a continuous-batching serving front

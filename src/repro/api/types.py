@@ -5,10 +5,12 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.engine import (EXTRA_COVERAGE, EXTRA_DIMS_READ_MEAN,
-                               EXTRA_EST_SAVED_FLOPS, EXTRA_FALLBACK_BLOCKS,
-                               EXTRA_RULE_TIMELINE, EXTRA_SCREEN_PASS_MEAN,
-                               EXTRA_SURVIVORS_MEAN, EXTRA_UNCERTIFIED_MASK,
+from repro.core.engine import (EXTRA_AUDIT_RECALL, EXTRA_BREAKER_STATE,
+                               EXTRA_COVERAGE, EXTRA_DIMS_READ_MEAN,
+                               EXTRA_DRIFT_SCORE, EXTRA_EST_SAVED_FLOPS,
+                               EXTRA_FALLBACK_BLOCKS, EXTRA_RULE_TIMELINE,
+                               EXTRA_SCREEN_PASS_MEAN, EXTRA_SURVIVORS_MEAN,
+                               EXTRA_UNCERTIFIED_MASK,
                                EXTRA_UNCERTIFIED_QUERIES, ScanStats,
                                make_schedule)
 
@@ -58,6 +60,21 @@ STAT_EXTRA_KEYS: dict = {
         "stream and host paths (per-group/per-stage alive counts, "
         "DESIGN.md §8); formula-derived on the legacy two_stage engine "
         "and the mesh path (screen dims + completed tails).",
+    EXTRA_DRIFT_SCORE:
+        "Guardrail sessions only (SchedulePolicy.guardrails armed): the "
+        "drift sentinel's EWMA-smoothed query-drift score for this batch, "
+        "in [0, 1] — 0 = queries look like the reference corpus sample, "
+        "1 = maximal spectral/norm deviation (DESIGN.md §9).",
+    EXTRA_AUDIT_RECALL:
+        "Guardrail sessions only: EWMA of the online recall audit — a "
+        "deterministic ~1/64 query sample shadow-re-executed through the "
+        "certified full scan, top-k overlap vs the served answer.  1.0 "
+        "until the first audit fires.",
+    EXTRA_BREAKER_STATE:
+        "Guardrail sessions only: the circuit-breaker state that actually "
+        "served this batch — 'closed' (screening), 'open' (demoted to the "
+        "certified full scan), or 'half_open' (screening canary probe "
+        "during recovery).",
     EXTRA_COVERAGE:
         "Per-query float32 array: fraction of candidate blocks actually "
         "scanned for query i (anytime search, DESIGN.md §7).  1.0 "
@@ -126,6 +143,18 @@ class SchedulePolicy:
     deadline.  ``faults`` optionally scopes a ``repro.testing.FaultPlan``
     to sessions built with this policy (chaos testing; see
     ``repro.testing.faults``).
+
+    ``guardrails`` arms the guardrail layer (DESIGN.md §9): pass a
+    ``repro.core.guardrails.GuardrailConfig`` (or ``True`` for defaults)
+    and the session fits a query-drift sentinel at open time, shadow-audits
+    a deterministic ~1/64 query sample against the certified full scan,
+    and runs a per-(method, backend) circuit breaker that demotes DCO
+    screening to the certified full-scan body while drift plus audit
+    evidence says screening can't be trusted — recovering via half-open
+    canary probes.  Supported for scan-shaped searches (index 'flat' or
+    'ivf') on both backends; rejected for HNSW (a graph walk has no
+    certified fallback) and on the mesh path; a no-op for FDScanning
+    sessions, which are already the fallback.
     """
 
     delta0: int = 32
@@ -146,6 +175,7 @@ class SchedulePolicy:
     delta_merge_threshold: int = 4096
     anytime_block_group: int = 8
     faults: object | None = None
+    guardrails: object | None = None
 
     def stage_dims(self, D: int) -> list:
         """Host screening stage dims for dimensionality ``D`` (the paper's

@@ -32,6 +32,10 @@ EXTRA_COVERAGE = "coverage"                      # per-query scanned fraction
                                                  # (anytime search; 1.0 = full)
 EXTRA_DIMS_READ_MEAN = "dims_read_mean"          # dims touched per candidate
                                                  # (screen + completed tails)
+EXTRA_DRIFT_SCORE = "drift_score"                # guardrails: EWMA drift score
+EXTRA_AUDIT_RECALL = "audit_recall"              # guardrails: audited recall EWMA
+EXTRA_BREAKER_STATE = "breaker_state"            # guardrails: breaker state that
+                                                 # served the batch
 
 
 def make_schedule(D: int, delta0: int = 32, delta_d: int = 64, max_stages: int = 4):

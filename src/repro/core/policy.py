@@ -59,6 +59,11 @@ class PolicyConfig:
     screening overhead in dim units (compaction, merges).  ``hysteresis`` —
     fraction of the entry threshold the EWMA must drop below before the
     policy flips back to screening (avoids mode thrash at the boundary).
+    ``force_fallback`` — pin the policy in fallback: every block/chunk runs
+    the dedicated certified full-scan body and never returns to screening.
+    This is the guardrail breaker's demotion lever (DESIGN.md §9): the OPEN
+    state serves batches through a config with ``force_fallback=True``,
+    reusing the same jitted ``step_full`` graph the adaptive escape uses.
     """
 
     adaptive: bool = True
@@ -66,6 +71,7 @@ class PolicyConfig:
     ewma_alpha: float = 0.5
     overhead_dims: float = 8.0
     hysteresis: float = 0.9
+    force_fallback: bool = False
 
     @classmethod
     def from_schedule(cls, schedule) -> "PolicyConfig | None":
@@ -105,7 +111,9 @@ class HostPolicy:
     def __init__(self, cfg: PolicyConfig, D: int):
         self.cfg = cfg
         self.D = float(D)
-        self.mode = False           # True = serving blocks by fdscan
+        # force_fallback (the guardrail demotion) starts AND stays in
+        # fallback: every candidate block completes exactly
+        self.mode = bool(cfg.force_fallback)
         self.ewma = 0.0
         self._n_obs = 0
         self.fallback_blocks = 0
@@ -136,8 +144,8 @@ class HostPolicy:
         (the shadow stage's dims while in fallback), so the threshold tracks
         what screening actually costs on this scan.
         """
-        if n <= 0:
-            return
+        if n <= 0 or self.cfg.force_fallback:
+            return                  # demoted: the mode never flips back
         frac = n_pass / n
         a = self.cfg.ewma_alpha
         self.ewma = frac if self._n_obs == 0 else a * frac + (1 - a) * self.ewma

@@ -942,7 +942,10 @@ def stream_topk(state: dict, q_lead, q_tail, cfg: DcoEngineConfig,
     chunks served by fdscan).  Adaptive mode forces ``use_kernel=False`` for
     the dco_scan stage: the Pallas kernel freezes pruned rows mid-block, so
     its partials cannot be reused by the fallback branch's full completion
-    (the pq_lookup path is unaffected).
+    (the pq_lookup path is unaffected).  A policy with
+    ``force_fallback=True`` (the guardrail breaker's demotion, DESIGN.md
+    §9) skips the seed entirely and serves EVERY chunk by the dedicated
+    full-scan body — exact and certified by construction.
 
     ``deadline_ts`` (absolute ``time.monotonic()`` timestamp) arms ANYTIME
     mode (DESIGN.md §7): the corpus is walked in groups of ``block_group``
@@ -1018,7 +1021,13 @@ def stream_topk(state: dict, q_lead, q_tail, cfg: DcoEngineConfig,
     nqp = q_lead.shape[0]
     nchunks = nqp // c
     q_valid = jnp.arange(nqp) < nq
-    if probe is None:
+    if cfg.policy.force_fallback:
+        # guardrail demotion (DESIGN.md §9): every chunk runs the dedicated
+        # conditional-free full-scan body — certified by construction, no
+        # seed pass needed (works for flat and IVF-probed scans alike)
+        tau0 = ew0 = None
+        chunk_full = np.ones(nchunks, bool)
+    elif probe is None:
         tau0, ew0 = _seed_eval(state, blocks, q_lead, q_tail, q_extra, cfg)
         D = q_lead.shape[1] + q_tail.shape[1]
         if cfg.kind == "opq":

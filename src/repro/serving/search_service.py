@@ -26,8 +26,10 @@ as a partial result (``coverage < 1``, ``certified=False``).  A device-step
 exception (e.g. an injected ``testing.faults.FaultError``) fails only the
 batch that hit it — its requests resolve ``status="failed"`` and the
 service keeps serving.  ``health()`` snapshots queue depth, an EWMA of the
-windowed p99 latency, and the shed/timeout/partial/failure counters; every
-submitted request is accounted for by exactly one of
+windowed p99 latency, the shed/timeout/partial/uncertified/failure
+counters, and — when the session is guarded (DESIGN.md §9) — the circuit
+breaker's state and drift/audit EWMAs; every submitted request is
+accounted for by exactly one of
 ``completed + shed + timeouts + failures + pending``.
 
 Writes ride the LSM-style delta path (DESIGN.md §6): ``add()`` appends to
@@ -152,6 +154,7 @@ class SearchService:
         self.shed = 0                # admission victims (reject or shed_oldest)
         self.timeouts = 0            # budget expired while queued
         self.partials = 0            # served with coverage < 1.0
+        self.uncertified = 0         # served with a withdrawn certificate
         self.failures = 0            # requests lost to a device-step error
         self._lat_window: deque[float] = deque(maxlen=128)
         self._p99_ewma: float | None = None
@@ -301,6 +304,8 @@ class SearchService:
             req.ids = res.ids[j]
             req.dists = res.dists[j]
             req.certified = None if mask is None else bool(~mask[j])
+            if req.certified is False:
+                self.uncertified += 1
             req.coverage = None if cov is None else float(cov[j])
             if req.coverage is not None and req.coverage < 1.0:
                 self.partials += 1
@@ -337,8 +342,15 @@ class SearchService:
         EWMA of the windowed p99 request latency (seconds; None until the
         first resolution), and the full request-accounting counters.
         ``submitted == completed + shed + timeouts + failures + pending``
-        holds at every quiescent point."""
-        return {
+        holds at every quiescent point (``partials`` and ``uncertified``
+        sub-count completed requests — coverage < 1.0 and withdrawn
+        exactness certificates respectively).
+
+        When the session carries a guardrail (``SchedulePolicy(guardrails=
+        ...)``, DESIGN.md §9), the snapshot also reports its breaker state
+        and sentinel/audit EWMAs under ``breaker_state`` / ``drift_score``
+        / ``audit_recall`` / ``demoted_batches``."""
+        h = {
             "queue_depth": len(self._queue),
             "p99_ewma_s": self._p99_ewma,
             "submitted": self.submitted,
@@ -346,8 +358,17 @@ class SearchService:
             "shed": self.shed,
             "timeouts": self.timeouts,
             "partials": self.partials,
+            "uncertified": self.uncertified,
             "failures": self.failures,
             "steps": self.steps,
             "busy_s": self.busy_s,
             "rows_inserted": self.rows_inserted,
         }
+        g = self.session.guardrails() if hasattr(self.session, "guardrails") \
+            else None
+        if g is not None:
+            h["breaker_state"] = g["state"]
+            h["drift_score"] = g["drift_score"]
+            h["audit_recall"] = g["audit_recall"]
+            h["demoted_batches"] = g["demoted_batches"]
+        return h

@@ -35,6 +35,11 @@ Hook points (all no-ops when no plan is active):
     actually write and whether to simulate a crash (the writer then raises
     :class:`SimulatedCrash` after the partial write, modeling power loss
     mid-frame).  Consumed once per armed plan.
+``drift_override(plan, score)`` / ``audit_override(plan, recall)``
+    consulted by the guardrail layer (core.guardrails, DESIGN.md §9) —
+    replace the sentinel's measured drift score / the audit-or-canary
+    sample recall, so breaker trips and audit divergence are injectable
+    deterministically (the guardrail state-machine edge tests).
 
 ``FaultPlan`` is a frozen dataclass (hashable, safe inside the frozen
 ``SchedulePolicy``); mutable runtime counters live module-side and reset
@@ -68,11 +73,21 @@ class FaultPlan:
     ``torn_frame_keep``     on the next WAL frame write, keep only this
                             fraction of the frame's bytes (0 <= f < 1) and
                             raise ``SimulatedCrash``; -1.0 = never.
+    ``drift_score``         override the guardrail sentinel's raw batch
+                            drift score with this value (0 <= s <= 1;
+                            -1.0 = no override) — makes breaker trips
+                            deterministic regardless of query content.
+    ``audit_recall``        override the guardrail audit/canary sampled
+                            recall (0 <= r <= 1; -1.0 = no override) —
+                            injects audit divergence without needing a
+                            screen that actually loses neighbors.
     """
 
     slow_block_s: float = 0.0
     fail_search_after: int = -1
     torn_frame_keep: float = -1.0
+    drift_score: float = -1.0
+    audit_recall: float = -1.0
 
 
 # module-side runtime state: the active global plan and mutable counters
@@ -147,6 +162,22 @@ def check_search(plan: FaultPlan | None) -> None:
         raise FaultError(
             f"injected device-step failure on search call {n} "
             f"(FaultPlan.fail_search_after={plan.fail_search_after})")
+
+
+def drift_override(plan: FaultPlan | None, score: float) -> float:
+    """Guardrail hook: replace the sentinel's measured raw drift score
+    (``core.guardrails.Guardrail.run``) with the plan's, when armed."""
+    if plan is None or plan.drift_score < 0.0:
+        return score
+    return float(plan.drift_score)
+
+
+def audit_override(plan: FaultPlan | None, recall: float) -> float:
+    """Guardrail hook: replace the measured audit/canary sample recall with
+    the plan's, when armed — the audit-divergence injection route."""
+    if plan is None or plan.audit_recall < 0.0:
+        return recall
+    return float(plan.audit_recall)
 
 
 def torn_frame(plan: FaultPlan | None, buf: bytes) -> tuple[bytes, bool]:

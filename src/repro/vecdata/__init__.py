@@ -1,1 +1,3 @@
-from repro.vecdata.synthetic import DATASETS, VectorDataset, load_dataset  # noqa: F401
+from repro.vecdata.synthetic import (DATASETS, DRIFT_SCENARIOS,  # noqa: F401
+                                     VectorDataset, load_dataset,
+                                     make_drift_scenario, make_ood_queries)

@@ -191,6 +191,51 @@ def make_ood_queries(X: np.ndarray, nq: int, *, severity: float = 1.0,
     return np.ascontiguousarray(Q, np.float32)
 
 
+#: Severity profiles of :func:`make_drift_scenario`.
+DRIFT_SCENARIOS = ("gradual", "sudden", "recovering")
+
+
+def make_drift_scenario(X: np.ndarray, nq: int, n_batches: int, *,
+                        scenario: str = "sudden", severity: float = 1.0,
+                        seed: int = 123) -> list:
+    """A stream of query batches whose OOD severity follows a named drift
+    profile — the guardrail layer's workload generator (DESIGN.md §9).
+
+    Returns ``n_batches`` arrays of shape ``(nq, D)``; batch ``b`` is drawn
+    by :func:`make_ood_queries` at that batch's severity (ID-like batches
+    use severity 0.0 — the matched-spectrum draw — so every batch comes
+    from the same generator and only the drift knob moves):
+
+    ``"gradual"``     severity ramps linearly 0 -> ``severity`` over the
+                      stream (slow modality creep; the sentinel EWMA should
+                      cross its threshold mid-stream).
+    ``"sudden"``      first third in-distribution, then a step to
+                      ``severity`` (hard modality switch; breakers must
+                      trip within a few batches).
+    ``"recovering"``  in-distribution, a middle-third excursion at
+                      ``severity``, then back (tests the half-open canary
+                      re-promotion path).
+
+    Each batch gets its own derived seed, so batches are independent draws
+    and the whole stream is reproducible from ``seed``.
+    """
+    if scenario not in DRIFT_SCENARIOS:
+        raise ValueError(
+            f"scenario must be one of {DRIFT_SCENARIOS}, got {scenario!r}")
+    if n_batches < 1:
+        raise ValueError(f"n_batches must be >= 1, got {n_batches}")
+    third = max(1, n_batches // 3)
+    sev = np.zeros(n_batches)
+    if scenario == "gradual":
+        sev = np.linspace(0.0, 1.0, n_batches) * severity
+    elif scenario == "sudden":
+        sev[third:] = severity
+    else:                                   # recovering
+        sev[third:2 * third] = severity
+    return [make_ood_queries(X, nq, severity=float(s), seed=seed + 1000 * b)
+            for b, s in enumerate(sev)]
+
+
 def recall_at_k(found_ids: np.ndarray, gt_ids: np.ndarray) -> float:
     """Paper Eq. (1), averaged over queries."""
     k = gt_ids.shape[1]

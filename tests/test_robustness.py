@@ -239,6 +239,11 @@ def test_counters_account_for_every_ticket():
                               + h["failures"] + h["queue_depth"])
     assert h["shed"] == 4 and h["timeouts"] >= 3
     assert h["p99_ewma_s"] is not None and h["p99_ewma_s"] >= 0.0
+    # uncertified/partials sub-count COMPLETED requests (they resolve
+    # "done"; the certificate/coverage is per-request metadata, so they
+    # must never double-count against the terminal-state partition)
+    assert 0 <= h["uncertified"] <= h["completed"]
+    assert 0 <= h["partials"] <= h["completed"]
 
 
 def test_device_fault_fails_batch_not_service():
@@ -267,6 +272,10 @@ def test_anytime_partial_served_through_service():
     partial = [r for r in served if r.coverage is not None
                and r.coverage < 1.0]
     assert partial and all(r.certified is False for r in partial)
+    # every withdrawn certificate is counted once in health()
+    h = svc.health()
+    assert h["uncertified"] == sum(r.certified is False for r in served)
+    assert h["uncertified"] >= len(partial)
 
 
 # ------------------------------------------------------- fault plumbing -----

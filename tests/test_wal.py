@@ -170,13 +170,100 @@ def test_load_errors_are_typed_and_name_the_path(tmp_path):
     assert ei.value.path == missing
     bad = tmp_path / "bad.bin"
     bad.write_bytes(b"\x00 this is not a snapshot")
-    with pytest.raises(IndexLoadError, match="not a readable"):
-        SearchSession.load(str(bad))
+    with pytest.raises(IndexLoadError, match="integrity trailer"):
+        SearchSession.load(str(bad))        # foreign file: no SNAP trailer
     notdict = tmp_path / "notdict.bin"
     import pickle
-    notdict.write_bytes(pickle.dumps([1, 2, 3]))
+    notdict.write_bytes(_with_trailer(pickle.dumps([1, 2, 3])))
     with pytest.raises(IndexLoadError, match="not a session snapshot"):
         SearchSession.load(str(notdict))
+
+
+def _with_trailer(body: bytes) -> bytes:
+    """Append a VALID integrity trailer, as save_session would."""
+    import struct
+    import zlib
+    return body + b"SNAP" + struct.pack("<QI", len(body), zlib.crc32(body))
+
+
+# ----------------------------------------------------- snapshot integrity ----
+def test_snapshot_bitflip_is_detected_before_unpickling(tmp_path):
+    """A flipped bit anywhere in the pickle payload must fail the crc32
+    check with a typed error — never reach ``pickle.loads``."""
+    X, _, _ = _data()
+    p = _snap(tmp_path)
+    open_index(X, path=p)
+    raw = bytearray(open(p, "rb").read())
+    raw[len(raw) // 2] ^= 0x01               # single bit, mid-payload
+    open(p, "wb").write(bytes(raw))
+    with pytest.raises(IndexLoadError, match="checksum mismatch") as ei:
+        SearchSession.load(p)
+    assert ei.value.path == p
+
+
+def test_snapshot_truncation_is_detected(tmp_path):
+    """Losing the tail (trailer gone or payload short) is a typed load
+    error, whichever byte the cut lands on."""
+    X, _, _ = _data()
+    p = _snap(tmp_path)
+    open_index(X, path=p)
+    raw = open(p, "rb").read()
+    for keep in (len(raw) - 1, len(raw) - 8, len(raw) // 2, 3):
+        open(p, "wb").write(raw[:keep])
+        with pytest.raises(IndexLoadError,
+                           match="integrity trailer|checksum mismatch"):
+            SearchSession.load(p)
+
+
+def test_trailer_corruption_is_detected(tmp_path):
+    """Bit-rot in the trailer itself (stored crc) also fails closed."""
+    X, _, _ = _data()
+    p = _snap(tmp_path)
+    open_index(X, path=p)
+    raw = bytearray(open(p, "rb").read())
+    raw[-1] ^= 0xFF                          # stored crc32 byte
+    open(p, "wb").write(bytes(raw))
+    with pytest.raises(IndexLoadError, match="checksum mismatch"):
+        SearchSession.load(p)
+
+
+# ------------------------------------------------------- non-finite rows ----
+def test_add_rejects_non_finite_rows(tmp_path):
+    """add() refuses NaN/Inf rows BEFORE logging them, so poison never
+    reaches the WAL through the public path."""
+    X, extra, _ = _data()
+    p = _snap(tmp_path)
+    sess = open_index(X, path=p)
+    poison = extra[:4].copy()
+    poison[1, 0] = np.nan
+    poison[3, 2] = np.inf
+    with pytest.raises(ValueError, match="NaN/Inf"):
+        sess.add(poison)
+    assert sess.n == X.shape[0]              # nothing inserted
+    re = SearchSession.load(p)               # nothing logged either
+    assert re.n == X.shape[0]
+
+
+def test_replay_skips_non_finite_frames_with_warning(tmp_path):
+    """Defense in depth: a poison frame already ON DISK (written by an
+    older build, or bit-rot that kept the CRC valid) is skipped at replay
+    with a warning, and clean frames after it still apply."""
+    X, extra, Q = _data()
+    p = _snap(tmp_path)
+    sess = open_index(X, path=p)
+    sess.add(extra[:8])                      # clean frame, n_before=600
+    poison = extra[8:12].copy()
+    poison[0, 0] = np.nan
+    sess.wal.append(poison, sess.n)          # bypass add()'s validation
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        re = SearchSession.load(p)
+    assert any("non-finite" in str(x.message) for x in w)
+    assert re.n == X.shape[0] + 8            # clean frame applied, poison not
+    clean = np.concatenate([X, extra[:8]])
+    oracle = np.argsort(((clean[None] - Q[:, None]) ** 2).sum(-1), 1)[:, :5]
+    got = re.search(Q, 5).ids
+    assert np.array_equal(np.sort(got, 1), np.sort(oracle, 1))
 
 
 def test_open_index_path_roundtrip_and_ivf(tmp_path):
