@@ -26,9 +26,24 @@ open/half-open (the certified full scan) has recall 1.000; the recovering
 cell re-promotes through half-open canaries; request accounting is exact
 in every cell.
 
+**failover** — does the replicated tier (DESIGN.md §10) survive losing
+and regaining a replica mid-stream?  Two cells.  *kill_revive*: a
+shard-mode ``ReplicatedService`` replays a Poisson arrival sequence while
+one shard is killed a third of the way in (``faults.install``) and
+revived at two thirds; zero acknowledged tickets may be lost, the
+accounting invariant must hold exactly, every answer served during the
+outage must be flagged (coverage < 1, certificate withdrawn, ``degraded``)
+with recall honest against its coverage, and the revived shard must
+re-admit through half-open probes and restore full-coverage certified
+answers.  *hedge*: a replicate-mode tier with one injected straggler
+replica serves the SAME Poisson arrivals twice — hedging armed vs
+disarmed — on a deterministic injected timer; hedged p99 must beat the
+unhedged control.
+
 Writes BENCH_robustness.json; ``--dryrun`` is the CI smoke (tiny corpus,
-one overloaded rate / the sudden drift cell only, fault injection for
-determinism, no JSON, hard RuntimeError on a failed drift acceptance).
+one overloaded rate / the sudden drift cell only / shortened failover
+replay, fault injection for determinism, no JSON, hard RuntimeError on a
+failed drift or failover acceptance).
 """
 from __future__ import annotations
 
@@ -42,8 +57,10 @@ import numpy as np
 from benchmarks.common import (dataset, emit, fmt3, latency_percentiles,
                                shared_pca)
 from repro.api import GuardrailConfig, SchedulePolicy, SearchSession
+from repro.core.engine import EXTRA_DEGRADED
 from repro.core.methods import make_method
-from repro.testing import faults
+from repro.serving import ReplicaPolicy, open_replicated
+from repro.testing import FaultPlan, faults
 from repro.vecdata import load_dataset, make_drift_scenario, make_ood_queries
 
 K, SLOTS = 10, 16
@@ -51,7 +68,7 @@ NQ_POOL = 64
 MAX_QUEUE = 2 * SLOTS
 RATES = (1.0, 2.0, 4.0)       # offered rate as a multiple of capacity
 SEED = 23
-SCENARIOS = ("overload", "drift", "all")
+SCENARIOS = ("overload", "drift", "failover", "all")
 
 
 def _build_session(X, pca, *, d1, row_block=4096, block_group=2,
@@ -410,6 +427,185 @@ def _drift_suite(ds, pca, *, dryrun: bool) -> dict:
     return out
 
 
+# ---------------------------------------------------------------------------
+# failover suite (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def _failover_replay(svc, pool, qidx, arrivals, *, dead, kill_i, revive_i):
+    """Poisson replay with a mid-stream kill and revive of replica ``dead``
+    (both scheduled by submit index, installed via ``faults.install`` so
+    the swap can straddle the loop).  Returns every ticket in submit
+    order."""
+    tickets, t, i = [], 0.0, 0
+    prev, killed, revived = None, False, False
+    try:
+        while i < len(arrivals) or svc.pending:
+            while i < len(arrivals) and arrivals[i] <= t:
+                if not killed and i >= kill_i:
+                    prev = faults.install(FaultPlan(dead_replica=dead))
+                    killed = True
+                elif killed and not revived and i >= revive_i:
+                    faults.install(prev)
+                    revived = True
+                tickets.append(svc.submit(pool[qidx[i]], now=arrivals[i]))
+                i += 1
+            out = svc.step(now=t)
+            if out:
+                t = max(r.t_done for r in out)
+            elif i < len(arrivals):
+                t = max(t, arrivals[i])
+            else:
+                break
+        svc.drain(now=t)
+    finally:
+        if killed and not revived:
+            faults.install(prev)
+    return tickets
+
+
+def _kill_revive_cell(ds, *, dryrun: bool) -> dict:
+    """Shard-mode tier through a kill -> degraded window -> revival."""
+    n_req = 30 if dryrun else 90
+    replicas, dead = 3, 1
+    pol = ReplicaPolicy(max_retries=1, eject_after=1, probe_after=1,
+                        promote_after=1, backoff_base_s=0.0, jitter=0.0,
+                        hedge=False)
+    svc = open_replicated(ds.X, replicas=replicas, mode="shard",
+                          slots=8, k=K, replica_policy=pol, seed=SEED)
+    pool = np.ascontiguousarray(ds.Q[:NQ_POOL], np.float32)
+    oracle = _oracle(ds.X, pool)
+    rng = np.random.default_rng(SEED + 3)
+    qidx = [int(i % NQ_POOL) for i in range(n_req)]
+    arrivals = np.cumsum(rng.exponential(1.0 / 200.0, n_req))
+    tickets = _failover_replay(svc, pool, qidx, arrivals, dead=dead,
+                               kill_i=n_req // 3, revive_i=2 * n_req // 3)
+    h = svc.health()
+    lost = sum(1 for r in tickets if r.status == "pending")
+    done = [r for r in tickets if r.done]
+    degraded = [r for r in done if r.stats[EXTRA_DEGRADED] == 1.0]
+    full = [r for r in done if r.stats[EXTRA_DEGRADED] == 0.0]
+
+    def _recall(rows):
+        return (float(np.mean([np.isin(r.ids[:K], oracle[j]).mean()
+                               for r, j in zip(tickets, qidx)
+                               if r in rows])) if rows else None)
+
+    deg_cov = (float(np.mean([r.coverage for r in degraded]))
+               if degraded else None)
+    deg_rec = _recall(degraded)
+    rs = svc.replicas[dead]
+    reasons = [t["reason"] for t in rs.breaker.transitions]
+    row = {
+        "n_requests": n_req,
+        "replicas": replicas,
+        "killed_replica": dead,
+        "kill_at": n_req // 3,
+        "revive_at": 2 * n_req // 3,
+        "served": len(done),
+        "lost_acknowledged": lost,
+        "degraded_served": len(degraded),
+        "degraded_coverage_mean": deg_cov,
+        "degraded_recall": deg_rec,
+        "full_recall": _recall(full),
+        "dead_replica_final_state": rs.state,
+        "dead_replica_transitions": [
+            f"{t['from']}->{t['to']}: {t['reason']}"
+            for t in rs.breaker.transitions],
+        "accounting_exact": h["submitted"] == (
+            h["completed"] + h["shed"] + h["timeouts"] + h["failures"]
+            + svc.pending),
+        "accept": {
+            "lost_acknowledged_zero": lost == 0,
+            "accounting_exact": None,      # filled below
+            "outage_answers_flagged": bool(degraded) and all(
+                r.coverage < 1.0 and not r.certified for r in degraded),
+            # spatial partials are exact over the surviving union, so on
+            # shuffled rows recall tracks coverage; 0.5x absorbs skew
+            "degraded_recall_honest": (
+                deg_rec is not None and deg_cov is not None
+                and deg_rec >= 0.5 * deg_cov),
+            "readmitted_after_revival": (
+                rs.state == "closed"
+                and any("re-admitted" in r for r in reasons)),
+            "full_coverage_restored": bool(done)
+            and done[-1].coverage == 1.0 and done[-1].certified is True,
+        },
+    }
+    row["accept"]["accounting_exact"] = row["accounting_exact"]
+    emit(f"robustness/failover/{ds.name}/kill_revive", 0.0,
+         lost=lost, degraded=len(degraded),
+         cov="-" if deg_cov is None else fmt3(deg_cov),
+         recall="-" if deg_rec is None else fmt3(deg_rec),
+         final=rs.state, ok=row["accounting_exact"])
+    return row
+
+
+def _hedge_cell(ds, *, dryrun: bool) -> dict:
+    """Hedged vs unhedged p99 under one injected straggler replica, on the
+    same Poisson arrivals and a deterministic virtual timer (walls are
+    charged, not slept — both runs are replay-exact)."""
+    n_req = 32 if dryrun else 96
+    slow_s, fast_s = 0.06, 0.01
+    rng = np.random.default_rng(SEED + 7)
+    pool = np.ascontiguousarray(ds.Q[:NQ_POOL], np.float32)
+    qidx = [int(i % NQ_POOL) for i in range(n_req)]
+    # offered rate well under capacity: latency is the service wall, not
+    # queue wait, so the hedged-vs-unhedged p99 gap is the hedge's doing
+    arrivals = np.cumsum(rng.exponential(1.0 / 20.0, n_req))
+    rows = {}
+    for name, hedge in (("hedged", True), ("unhedged", False)):
+        pol = ReplicaPolicy(hedge=hedge, hedge_factor=2.0,
+                            hedge_min_delay_s=0.005, jitter=0.0, seed=SEED)
+        svc = open_replicated(
+            ds.X, replicas=3, mode="replicate", slots=4, k=K,
+            replica_policy=pol, seed=SEED,
+            timer=lambda idx, wall: slow_s if idx == 0 else fast_s)
+        # warm-up: every replica gets a primary dispatch so the fleet p99
+        # estimate exists before measurement (a cold-start straggler batch
+        # can't hedge and would own the p99 by itself)
+        for j in range(12):
+            svc.submit(pool[j], now=-1.0 + 1e-3 * j)
+        svc.drain(now=-0.5)
+        tickets = _replay(svc, pool, qidx, arrivals)
+        h = svc.health()
+        lat = [r.latency_s for r in tickets if r.done]
+        rows[name] = {
+            "n_requests": n_req,
+            "served": sum(1 for r in tickets if r.done),
+            **latency_percentiles(lat),
+            "hedges": h["hedges"],
+            "hedge_wins": h["hedge_wins"],
+            "hedge_losses": h["hedge_losses"],
+            "accounting_exact": h["submitted"] == (
+                h["completed"] + h["shed"] + h["timeouts"]
+                + h["failures"] + svc.pending),
+        }
+    hp, up = rows["hedged"]["p99_ms"], rows["unhedged"]["p99_ms"]
+    rows["straggler"] = {"replica": 0, "slow_wall_s": slow_s,
+                         "fast_wall_s": fast_s}
+    rows["accept"] = {
+        "hedges_fired_and_won": (rows["hedged"]["hedges"] >= 1
+                                 and rows["hedged"]["hedge_wins"] >= 1),
+        "control_never_hedges": rows["unhedged"]["hedges"] == 0,
+        "hedging_reduces_p99": hp is not None and up is not None and hp < up,
+        "accounting_exact_both": (rows["hedged"]["accounting_exact"]
+                                  and rows["unhedged"]["accounting_exact"]),
+    }
+    emit(f"robustness/failover/{ds.name}/hedge", 0.0,
+         hedged_p99=f"{hp:.1f}", unhedged_p99=f"{up:.1f}",
+         hedges=rows["hedged"]["hedges"], wins=rows["hedged"]["hedge_wins"],
+         ok=rows["accept"]["hedging_reduces_p99"])
+    return rows
+
+
+def _failover_suite(ds, *, dryrun: bool) -> dict:
+    kill = _kill_revive_cell(ds, dryrun=dryrun)
+    hedge = _hedge_cell(ds, dryrun=dryrun)
+    accept = {f"failover_{k}": v for k, v in kill.pop("accept").items()}
+    accept.update({f"hedge_{k}": v for k, v in hedge.pop("accept").items()})
+    return {"kill_revive": kill, "hedge": hedge, "accept": accept}
+
+
 def main(json_path: str | None = None, *, dryrun: bool = False,
          scenario: str = "all") -> dict:
     if scenario not in SCENARIOS:
@@ -446,6 +642,13 @@ def main(json_path: str | None = None, *, dryrun: bool = False,
         if dryrun and not all(dr["accept"].values()):
             raise RuntimeError(
                 f"guardrail drift smoke failed: {dr['accept']}")
+    if scenario in ("failover", "all"):
+        fo = _failover_suite(ds, dryrun=dryrun)
+        out["failover"] = {k: v for k, v in fo.items() if k != "accept"}
+        out["accept"].update(fo["accept"])
+        if dryrun and not all(fo["accept"].values()):
+            raise RuntimeError(
+                f"failover chaos smoke failed: {fo['accept']}")
     if json_path:
         with open(json_path, "w") as f:
             json.dump(out, f, indent=1)
@@ -455,8 +658,9 @@ def main(json_path: str | None = None, *, dryrun: bool = False,
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--dryrun", action="store_true",
-                    help="tiny corpus, 4x only / sudden cell only, fault "
-                         "injection, no JSON (CI smoke)")
+                    help="tiny corpus, 4x only / sudden cell only / short "
+                         "failover replay, fault injection, no JSON (CI "
+                         "smoke)")
     ap.add_argument("--scenario", choices=SCENARIOS, default="all",
                     help="which suite to run (default: all)")
     args = ap.parse_args()

@@ -18,5 +18,8 @@ from repro.api.types import (STAT_EXTRA_KEYS, SchedulePolicy,  # noqa: F401
 from repro.core.engine import QueryBatch, ScanStats  # noqa: F401
 from repro.core.guardrails import (BREAKER_STATES, Guardrail,  # noqa: F401
                                    GuardrailConfig)
+from repro.serving.replica import (ReplicaDispatchError,  # noqa: F401
+                                   ReplicaPolicy, ReplicatedService,
+                                   open_replicated)
 from repro.serving.search_service import (SearchRequest,  # noqa: F401
                                           SearchService)

@@ -218,6 +218,7 @@ class JaxBackend:
         self._groups = 1            # resolved PDX dim groups of that layout
         self._shard_args = None     # device_put shards (mesh path)
         self._mesh_fns: dict = {}   # cfg -> shard_map fn
+        self._mesh_row_block = None  # shard-aligned row_block (mesh path)
         self._list_sizes = None     # IVF partition sizes (probe stats)
         self._cfg_cache: dict = {}  # (k, anytime, demoted) -> DcoEngineConfig
                                     # (same object per call so jit static-arg
@@ -423,6 +424,16 @@ class JaxBackend:
                 for v in (xr[:, :d1], xr[:, d1:],
                           (xr[:, :d1] ** 2).sum(1), (xr[:, d1:] ** 2).sum(1)))
             self._mesh_extra_state = rule_scalars(dstate, d1)
+            # certificate sharp edge (make_distributed_topk): a shard whose
+            # row count is not a row_block multiple pads phantom rows inside
+            # the compiled call, weakening the per-shard certificate — so
+            # align row_block to the largest divisor of the shard size
+            # (facade sessions never hit the build-time error)
+            from repro.core.jax_engine import _aligned_row_block
+            n_shards = int(np.prod(tuple(self.mesh.shape.values())))
+            per_shard = max(1, self._n_main // max(n_shards, 1))
+            self._mesh_row_block = _aligned_row_block(
+                per_shard, self.policy.row_block)
 
     def _config(self, k: int, anytime: bool = False, demoted: bool = False):
         from repro.core.jax_engine import DcoEngineConfig
@@ -430,9 +441,11 @@ class JaxBackend:
         if (k, anytime, demoted) in self._cfg_cache:
             return self._cfg_cache[(k, anytime, demoted)]
         ds, p = self._dstate, self.policy
+        row_block = p.row_block if self.mesh is None \
+            else getattr(self, "_mesh_row_block", p.row_block)
         kw = dict(kind=ds["kind"], d1=self._d1, k=k, capacity=p.capacity,
                   query_chunk=p.query_chunk, tau_slack=p.tau_slack,
-                  row_block=p.row_block, block_capacity=p.block_capacity,
+                  row_block=row_block, block_capacity=p.block_capacity,
                   use_kernel=p.use_kernel, dim_groups=self._groups,
                   group_capacity=p.group_capacity)
         if ds["kind"] == "adsampling":
@@ -630,7 +643,8 @@ class JaxBackend:
                     make_distributed_topk(self.mesh, cfg,
                                           tuple(self.mesh.axis_names),
                                           extra_state=self._mesh_extra_state,
-                                          engine=engine))
+                                          engine=engine,
+                                          n_rows=self._n_main))
             d, i, surv, dmin = self._mesh_fns[cfg](*self._shard_args,
                                                    jnp.asarray(ql),
                                                    jnp.asarray(qt), qe)

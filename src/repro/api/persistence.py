@@ -26,6 +26,17 @@ acknowledged to the caller (the write happens before ``add()`` returns),
 so dropping it loses no acknowledged insert.  ``save()`` clears the log:
 the new snapshot supersedes it.
 
+Both the snapshot and the WAL are written *atomically with respect to
+crashes* (DESIGN.md §10): ``save_session`` writes a tmp file, fsyncs it,
+``os.replace``s it over the target, and fsyncs the parent directory — a
+crash at any point leaves either the old snapshot or the new one, never a
+half-written hybrid (``testing.FaultPlan(crash_save=...)`` injects the
+worst point, after the tmp write and before the rename).  ``clear()``
+empties the log the same way.  With ``SchedulePolicy(wal_max_bytes=...)``
+set, the log *rotates*: once the active segment reaches the cap, later
+appends open numbered segments (``.wal.0001``, ...), replayed in order
+with per-segment torn-tail truncation, and ``clear()`` removes them all.
+
 Load failures raise :class:`IndexLoadError` naming the path and the likely
 cause, instead of leaking pickle/OS internals.
 """
@@ -69,18 +80,92 @@ def wal_path(path) -> str:
     return f"{path}.wal"
 
 
+def _fsync_dir(dirpath) -> None:
+    """fsync a directory so a rename/unlink inside it is durable (best
+    effort: some filesystems refuse directory fsync — then the rename is
+    only as durable as the OS makes it, which was the status quo)."""
+    fd = os.open(dirpath or ".", os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def _atomic_write(path, data: bytes, *, plan=None) -> None:
+    """Write ``data`` to ``path`` crash-atomically: tmp file in the same
+    directory, fsync, ``os.replace``, parent-dir fsync.  A crash anywhere
+    leaves either the old ``path`` bytes or the new ones — never a torn
+    mix.  ``plan`` is an optional ``testing.FaultPlan`` whose
+    ``crash_save`` injects the worst crash point (tmp durable, rename
+    never issued)."""
+    from repro.testing import faults
+
+    path = str(path)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    faults.check_save(plan)
+    os.replace(tmp, path)
+    _fsync_dir(os.path.dirname(path))
+
+
 class DeltaWAL:
     """Append-only, CRC-framed, fsync'd log of delta inserts (DESIGN.md §7).
 
     One instance per snapshot path; ``append`` is called by
     ``SearchSession.add()`` *before* the rows are applied (write-ahead), so
     an acknowledged insert is always on disk.  ``frames()`` yields the
-    valid prefix of the log, stopping at (and warning about) the first
-    torn/corrupt frame.  ``clear()`` truncates after a snapshot.
+    valid frames of the log, truncating reads at (and warning about) the
+    first torn/corrupt frame of each segment.  ``clear()`` empties the log
+    atomically after a snapshot.
+
+    With ``max_bytes`` > 0 the log is *segmented*: ``path`` itself is
+    segment 0 and appends that find the active segment at or over the cap
+    open the next numbered segment (``{path}.0001``, ``{path}.0002``, ...).
+    Replay walks segments in order — the per-frame ``n_before`` guard keeps
+    it idempotent regardless — so ``health()`` can bound WAL disk usage via
+    :meth:`total_bytes` while no single file grows without limit between
+    snapshots.
     """
 
-    def __init__(self, path):
+    def __init__(self, path, *, max_bytes: int = 0):
         self.path = str(path)
+        self.max_bytes = int(max_bytes or 0)
+
+    # -- segments -------------------------------------------------------------
+    def _segments(self) -> list[str]:
+        """Existing segment paths in append/replay order: the base path
+        (segment 0) first, then numbered rotations sorted numerically."""
+        segs: list[str] = []
+        if os.path.exists(self.path):
+            segs.append(self.path)
+        d = os.path.dirname(self.path) or "."
+        base = os.path.basename(self.path) + "."
+        try:
+            names = os.listdir(d)
+        except FileNotFoundError:
+            names = []
+        numbered = [(int(nm[len(base):]), os.path.join(d, nm))
+                    for nm in names
+                    if nm.startswith(base) and nm[len(base):].isdigit()]
+        segs.extend(p for _, p in sorted(numbered))
+        return segs
+
+    def _active_path(self) -> str:
+        """The segment the next append lands in (rotating past a full
+        one when ``max_bytes`` caps segment size)."""
+        segs = self._segments()
+        if not segs:
+            return self.path
+        last = segs[-1]
+        if self.max_bytes > 0 and os.path.getsize(last) >= self.max_bytes:
+            nxt = 1 if last == self.path else int(last.rsplit(".", 1)[1]) + 1
+            return f"{self.path}.{nxt:04d}"
+        return last
 
     # -- write ----------------------------------------------------------------
     def append(self, rows: np.ndarray, n_before: int, *, plan=None) -> None:
@@ -98,22 +183,26 @@ class DeltaWAL:
         frame = (_WAL_MAGIC + _WAL_HEADER.pack(len(payload),
                                                zlib.crc32(payload)) + payload)
         out, crash = faults.torn_frame(plan, frame)
-        with open(self.path, "ab") as f:
+        target = self._active_path()
+        with open(target, "ab") as f:
             f.write(out)
             f.flush()
             os.fsync(f.fileno())
         if crash:
             raise faults.SimulatedCrash(
                 f"injected crash mid-WAL-frame: wrote {len(out)} of "
-                f"{len(frame)} bytes to {self.path}")
+                f"{len(frame)} bytes to {target}")
 
     # -- read -----------------------------------------------------------------
-    def _scan(self) -> tuple[list[tuple[int, np.ndarray]], int, int]:
-        """Parse the log: (valid frames, bytes of valid prefix, file size).
-        A torn or corrupt tail warns — never a crash — because a torn frame
-        was by construction never acknowledged."""
+    def _scan(self, path=None) -> tuple[list[tuple[int, np.ndarray]],
+                                        int, int]:
+        """Parse one segment (default: the base): (valid frames, bytes of
+        valid prefix, file size).  A torn or corrupt tail warns — never a
+        crash — because a torn frame was by construction never
+        acknowledged."""
+        path = self.path if path is None else str(path)
         try:
-            with open(self.path, "rb") as f:
+            with open(path, "rb") as f:
                 data = f.read()
         except FileNotFoundError:
             return [], 0, 0
@@ -123,7 +212,7 @@ class DeltaWAL:
             head = data[off:off + 4 + hdr]
             if len(head) < 4 + hdr or head[:4] != _WAL_MAGIC:
                 warnings.warn(
-                    f"delta WAL {self.path}: torn/garbled frame header at "
+                    f"delta WAL {path}: torn/garbled frame header at "
                     f"byte {off}; dropping the unacknowledged tail "
                     f"({len(data) - off} bytes)", stacklevel=3)
                 break
@@ -131,7 +220,7 @@ class DeltaWAL:
             payload = data[off + 4 + hdr: off + 4 + hdr + ln]
             if len(payload) < ln or zlib.crc32(payload) != crc:
                 warnings.warn(
-                    f"delta WAL {self.path}: frame at byte {off} fails "
+                    f"delta WAL {path}: frame at byte {off} fails "
                     f"length/CRC (torn write); dropping the unacknowledged "
                     f"tail ({len(data) - off} bytes)", stacklevel=3)
                 break
@@ -142,27 +231,45 @@ class DeltaWAL:
         return out, off, len(data)
 
     def frames(self) -> list[tuple[int, np.ndarray]]:
-        """The valid ``(n_before, rows)`` frames, in log order (torn tail
-        dropped with a warning)."""
-        return self._scan()[0]
+        """The valid ``(n_before, rows)`` frames across all segments, in
+        log order (each segment's torn tail dropped with a warning)."""
+        out: list[tuple[int, np.ndarray]] = []
+        for seg in self._segments() or [self.path]:
+            out.extend(self._scan(seg)[0])
+        return out
+
+    def total_bytes(self) -> int:
+        """On-disk size of the log, summed over every segment (surfaced in
+        ``SearchService.health()`` as ``wal_bytes``)."""
+        return sum(os.path.getsize(seg) for seg in self._segments())
 
     def clear(self) -> None:
-        """Truncate the log (a fresh snapshot supersedes every frame)."""
-        with open(self.path, "wb"):
-            pass
+        """Empty the log (a fresh snapshot supersedes every frame):
+        numbered segments are unlinked, the base segment is emptied via the
+        same tmp + ``os.replace`` + dir-fsync dance as the snapshot — a
+        crash mid-clear leaves either the old log (harmless: replay is
+        idempotent) or the empty one, never a torn file."""
+        for seg in self._segments():
+            if seg != self.path:
+                os.remove(seg)
+        _atomic_write(self.path, b"")
 
     def replay(self, session) -> int:
-        """Apply every frame not already reflected in ``session`` (frames
-        with ``n_before < session.n`` are skipped — that is what makes a
-        double replay a no-op), then truncate any torn tail so the *next*
-        ``append`` lands on a frame boundary instead of behind garbage.
-        Returns rows applied."""
-        frames, valid_end, size = self._scan()
-        if valid_end < size:           # torn tail: cut the log back to the
-            with open(self.path, "rb+") as f:   # last acknowledged frame
-                f.truncate(valid_end)
-                f.flush()
-                os.fsync(f.fileno())
+        """Apply, segment by segment in order, every frame not already
+        reflected in ``session`` (frames with ``n_before < session.n`` are
+        skipped — that is what makes a double replay a no-op), then
+        truncate each segment's torn tail so the *next* ``append`` lands on
+        a frame boundary instead of behind garbage.  Returns rows
+        applied."""
+        frames: list[tuple[int, np.ndarray]] = []
+        for seg in self._segments() or [self.path]:
+            seg_frames, valid_end, size = self._scan(seg)
+            if valid_end < size:       # torn tail: cut the segment back to
+                with open(seg, "rb+") as f:   # the last acknowledged frame
+                    f.truncate(valid_end)
+                    f.flush()
+                    os.fsync(f.fileno())
+            frames.extend(seg_frames)
         applied = 0
         for n_before, rows in frames:
             if n_before < session.n:
@@ -184,12 +291,24 @@ class DeltaWAL:
         return applied
 
 
+def _wal_for(path, policy) -> DeltaWAL:
+    """The WAL armed for snapshot ``path``, honoring the policy's
+    ``wal_max_bytes`` rotation knob (0/absent = single segment)."""
+    return DeltaWAL(wal_path(path),
+                    max_bytes=getattr(policy, "wal_max_bytes", 0) or 0)
+
+
 def save_session(session, path) -> None:
     """Pickle a session's fitted method state, index, and policy — with a
     crc32 integrity trailer so a later load can prove the bytes are the
     ones written — then arm the delta WAL at ``path + ".wal"`` (clearing
     any previous log; this snapshot includes everything) so later ``add()``
-    calls are crash-safe."""
+    calls are crash-safe.
+
+    The write is crash-atomic (tmp + ``os.replace`` + dir fsync): until
+    the rename lands, the previous snapshot AND its un-cleared WAL are
+    intact on disk, so a crash mid-save (``FaultPlan(crash_save=...)``)
+    loses nothing — the old state reloads, delta frames and all."""
     payload = {
         "version": FORMAT_VERSION,
         "method_name": session.method.name,
@@ -200,14 +319,14 @@ def save_session(session, path) -> None:
         "policy": session.policy,
         "backend": session.backend.name,
     }
+    from repro.testing import faults
+
     body = pickle.dumps(payload, protocol=pickle.HIGHEST_PROTOCOL)
-    with open(path, "wb") as f:
-        f.write(body)
-        f.write(_SNAP_MAGIC
-                + _SNAP_TRAILER.pack(len(body), zlib.crc32(body)))
-        f.flush()
-        os.fsync(f.fileno())
-    session.wal = DeltaWAL(wal_path(path))
+    _atomic_write(
+        path, body + _SNAP_MAGIC
+        + _SNAP_TRAILER.pack(len(body), zlib.crc32(body)),
+        plan=faults.active(session.policy))
+    session.wal = _wal_for(path, session.policy)
     session.wal.clear()
 
 
@@ -261,6 +380,6 @@ def load_session(path, *, backend: str | None = None, mesh=None):
     sess = SearchSession(m, payload["index_kind"], payload["index"],
                          backend or payload["backend"], payload["policy"],
                          mesh=mesh)
-    sess.wal = DeltaWAL(wal_path(path))
+    sess.wal = _wal_for(path, sess.policy)
     sess.wal.replay(sess)
     return sess

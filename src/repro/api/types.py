@@ -6,11 +6,12 @@ import dataclasses
 import numpy as np
 
 from repro.core.engine import (EXTRA_AUDIT_RECALL, EXTRA_BREAKER_STATE,
-                               EXTRA_COVERAGE, EXTRA_DIMS_READ_MEAN,
-                               EXTRA_DRIFT_SCORE, EXTRA_EST_SAVED_FLOPS,
-                               EXTRA_FALLBACK_BLOCKS, EXTRA_RULE_TIMELINE,
-                               EXTRA_SCREEN_PASS_MEAN, EXTRA_SURVIVORS_MEAN,
-                               EXTRA_UNCERTIFIED_MASK,
+                               EXTRA_COVERAGE, EXTRA_DEGRADED,
+                               EXTRA_DIMS_READ_MEAN, EXTRA_DRIFT_SCORE,
+                               EXTRA_EST_SAVED_FLOPS, EXTRA_FALLBACK_BLOCKS,
+                               EXTRA_HEDGED, EXTRA_REPLICA,
+                               EXTRA_RULE_TIMELINE, EXTRA_SCREEN_PASS_MEAN,
+                               EXTRA_SURVIVORS_MEAN, EXTRA_UNCERTIFIED_MASK,
                                EXTRA_UNCERTIFIED_QUERIES, ScanStats,
                                make_schedule)
 
@@ -83,7 +84,23 @@ STAT_EXTRA_KEYS: dict = {
         "uncertified_mask bit, since an unscanned block may hold a true "
         "neighbor.  On the jax path the whole batch advances together, so "
         "coverage is uniform across queries; the host path checks the "
-        "deadline per query, so later queries can report 0.0.",
+        "deadline per query, so later queries can report 0.0.  The replica "
+        "tier (DESIGN.md §10) extends the same key *spatially*: under "
+        "shard loss, coverage is the fraction of corpus rows the surviving "
+        "shards actually hold, again with the certificate withdrawn.",
+    EXTRA_DEGRADED:
+        "Replica tier only (serving.ReplicatedService, DESIGN.md §10): 1.0 "
+        "when this batch was answered from a strict subset of shards — at "
+        "least one shard was down after retries, so coverage < 1 and every "
+        "query's certificate is withdrawn.  0.0 on fully-covered batches.",
+    EXTRA_REPLICA:
+        "Replica tier only: index of the replica that served this batch "
+        "(mode='replicate'; the hedge winner when a hedge fired), or -1.0 "
+        "for a sharded fan-out, where every live shard contributed.",
+    EXTRA_HEDGED:
+        "Replica tier only: 1.0 when a hedged duplicate dispatch raced "
+        "this batch (the primary exceeded its adaptive hedge delay), else "
+        "0.0 — whether the hedge *won* is in health()'s hedge_wins.",
 }
 
 
@@ -134,6 +151,13 @@ class SchedulePolicy:
     earlier).  Served by the streaming jax engine and the host flat/IVF
     scan; ignored by host HNSW walks and rejected on the mesh path.
 
+    ``wal_max_bytes`` rotates the crash-safe delta WAL (DESIGN.md §7/§10):
+    once the active segment reaches this many bytes, later ``add()``
+    appends open a fresh numbered segment (``.wal.0001``, ...), replayed in
+    order on load with per-segment torn-tail truncation — bounding the
+    single-file size (and the blast radius of one torn tail) between
+    snapshots.  0 = never rotate, the single-segment pre-PR-10 behavior.
+
     ``anytime_block_group`` is the deadline-check granularity of anytime
     search on the jax backend (DESIGN.md §7): a ``deadline_s`` search runs
     the streaming scan this many row blocks at a time, syncing with the
@@ -173,6 +197,7 @@ class SchedulePolicy:
     adaptive: bool = False
     fallback_margin: float = 1.5
     delta_merge_threshold: int = 4096
+    wal_max_bytes: int = 0
     anytime_block_group: int = 8
     faults: object | None = None
     guardrails: object | None = None

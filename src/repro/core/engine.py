@@ -36,6 +36,12 @@ EXTRA_DRIFT_SCORE = "drift_score"                # guardrails: EWMA drift score
 EXTRA_AUDIT_RECALL = "audit_recall"              # guardrails: audited recall EWMA
 EXTRA_BREAKER_STATE = "breaker_state"            # guardrails: breaker state that
                                                  # served the batch
+EXTRA_DEGRADED = "degraded"                      # replica tier: 1.0 when the
+                                                 # batch lost >= 1 shard
+EXTRA_REPLICA = "replica"                        # replica tier: serving replica
+                                                 # index (-1 = sharded fan-out)
+EXTRA_HEDGED = "hedged"                          # replica tier: 1.0 when a
+                                                 # hedge served/raced the batch
 
 
 def make_schedule(D: int, delta0: int = 32, delta_d: int = 64, max_stages: int = 4):

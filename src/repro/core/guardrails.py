@@ -73,6 +73,40 @@ from repro.testing import faults
 BREAKER_STATES = ("closed", "open", "half_open")
 
 
+class BreakerCore:
+    """The bare closed -> open -> half_open state machine: current state,
+    dwell bookkeeping, and a bounded transition log.
+
+    Two owners share it: the drift guardrail below (demotes DCO screening,
+    DESIGN.md §9) and the replicated serving tier's per-replica ejection
+    breaker (``serving.replica``, DESIGN.md §10).  The core is mechanism
+    only — *when* to flip (drift + evidence, consecutive failures, probe
+    outcomes) stays with the owner; the core records flips, resets dwell,
+    and rejects unknown state names.
+    """
+
+    def __init__(self):
+        self.state = "closed"
+        self.dwell = 0                      # steps spent in the current state
+        self.transitions: deque = deque(maxlen=256)
+
+    def tick(self) -> None:
+        """One observation in the current state (dwell grows by one)."""
+        self.dwell += 1
+
+    def transition(self, to: str, reason: str, *, at: int = 0) -> None:
+        """Flip to ``to`` (validated), logging ``{at, from, to, reason}``
+        and resetting dwell."""
+        if to not in BREAKER_STATES:
+            raise ValueError(
+                f"breaker state must be one of {BREAKER_STATES}, got {to!r}")
+        self.transitions.append(
+            {"batch": int(at), "from": self.state, "to": to,
+             "reason": reason})
+        self.state = to
+        self.dwell = 0
+
+
 @dataclasses.dataclass(frozen=True)
 class GuardrailConfig:
     """Static guardrail knobs (hashable: rides inside the frozen
@@ -212,9 +246,8 @@ class Guardrail:
         self.backend_name = backend
         self.sentinel = DriftSentinel.fit(
             method.state["X"], r=cfg.lead_r, seed=cfg.seed)
-        self.state = "closed"
+        self._core = BreakerCore()  # state + dwell + transition log
         self.batches = 0            # batches observed over the lifetime
-        self.dwell = 0              # batches spent in the current state
         self.drift_raw = 0.0
         self.drift_ewma = 0.0
         self.audit_recall = 1.0     # EWMA of audited/canary sample recall
@@ -225,24 +258,28 @@ class Guardrail:
         self.audited_queries = 0
         self.canaries = 0           # canary probes (half-open state)
         self.demoted_batches = 0    # batches served by the certified path
-        self.transitions: deque = deque(maxlen=256)
         self._audit_acc = 0.0       # fractional audit accumulator
 
-    # -- state machine -------------------------------------------------------
+    # -- state machine (delegated to BreakerCore) ----------------------------
+    @property
+    def state(self) -> str:
+        return self._core.state
+
+    @property
+    def dwell(self) -> int:
+        return self._core.dwell
+
+    @property
+    def transitions(self) -> deque:
+        return self._core.transitions
+
     def _transition(self, to: str, reason: str) -> None:
-        self.transitions.append(
-            {"batch": self.batches, "from": self.state, "to": to,
-             "reason": reason})
-        self.state = to
-        self.dwell = 0
+        self._core.transition(to, reason, at=self.batches)
         self.drift_streak = 0
         self.promote_streak = 0
 
     def force_state(self, state: str) -> None:
         """Operator/test override: jump the breaker to ``state`` (logged)."""
-        if state not in BREAKER_STATES:
-            raise ValueError(
-                f"breaker state must be one of {BREAKER_STATES}, got {state!r}")
         self._transition(state, "forced")
 
     # -- sampling ------------------------------------------------------------
@@ -318,7 +355,7 @@ class Guardrail:
                         or unc > cfg.uncertified_ceiling
                         or self.cost_ratio > cfg.cost_ceiling)
             self.batches += 1
-            self.dwell += 1
+            self._core.tick()
             if (drifted and self.drift_streak >= cfg.trip_after
                     and evidence and self.dwell >= cfg.min_dwell):
                 self._transition(
@@ -339,7 +376,7 @@ class Guardrail:
                 ok = rec >= cfg.audit_recall_floor and not drifted
                 self.promote_streak = self.promote_streak + 1 if ok else 0
                 self.batches += 1
-                self.dwell += 1
+                self._core.tick()
                 if not ok:
                     # re-open immediately: half-open batches are already
                     # served certified, so this flip changes nothing served
@@ -353,7 +390,7 @@ class Guardrail:
                         f"(recall {self.audit_recall:.3f})")
             else:                           # open
                 self.batches += 1
-                self.dwell += 1
+                self._core.tick()
                 if not drifted and self.dwell >= cfg.min_dwell:
                     self._transition(
                         "half_open",

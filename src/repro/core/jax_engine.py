@@ -205,8 +205,19 @@ def two_stage_topk(state: dict, q_lead: jax.Array, q_tail: jax.Array,
     return d[:nq], i[:nq], s[:nq]
 
 
+def _aligned_row_block(per_shard: int, row_block: int) -> int:
+    """The largest divisor of ``per_shard`` that is <= ``row_block`` — the
+    biggest certificate-safe streaming block for a mesh shard of that size
+    (worst case 1, which is always safe)."""
+    rb = max(1, min(int(row_block), int(per_shard)))
+    while per_shard % rb:
+        rb -= 1
+    return rb
+
+
 def make_distributed_topk(mesh, cfg: DcoEngineConfig, shard_axes=("data", "model"),
-                          extra_state: dict | None = None, engine: str = "stream"):
+                          extra_state: dict | None = None, engine: str = "stream",
+                          n_rows: int | None = None):
     """shard_map engine: dataset rows sharded over ``shard_axes``; queries
     (and per-query ``q_extra`` scalars) replicated; local top-k per shard
     then all-gather + global merge.  The local engine is the streaming
@@ -217,10 +228,19 @@ def make_distributed_topk(mesh, cfg: DcoEngineConfig, shard_axes=("data", "model
     dropped_min_est (Q,)) — survivors is the REAL number of stage-2
     completions summed over all shards (psum), not a capacity bound;
     dropped_min_est is the global (pmin) exactness certificate of the
-    streaming engine, +inf for the two-stage engine.  NOTE the per-shard
-    streaming layout is rebuilt inside the compiled call (a pad copy when
-    the shard size is not a row_block multiple) — size shards divisibly
-    when that matters."""
+    streaming engine, +inf for the two-stage engine.
+
+    ``n_rows`` (the total sharded row count) arms build-time validation of
+    the certificate sharp edge: when a shard's row count is not a
+    ``row_block`` multiple, the per-shard streaming layout pads the last
+    block with zero rows *inside* the compiled call, and those phantom
+    rows' estimates can sit under the running tau — weakening each shard's
+    dropped-estimate certificate (and, through the pmin merge, the global
+    one).  Passing ``n_rows`` makes that misalignment a clear build-time
+    error instead of a silently weaker certificate; the jax backend's mesh
+    path auto-aligns ``row_block`` to the shard size before calling, so
+    facade sessions never hit it.  ``None`` preserves the old
+    caller-beware behavior."""
     from jax.sharding import PartitionSpec as P
     import jax.experimental.shard_map as shard_map
 
@@ -230,6 +250,25 @@ def make_distributed_topk(mesh, cfg: DcoEngineConfig, shard_axes=("data", "model
         raise ValueError(
             "the adaptive DCO policy is single-device for now — drop "
             "SchedulePolicy(adaptive=True) on the mesh path (DESIGN.md §5)")
+    if n_rows is not None:
+        n_shards = 1
+        for a in shard_axes:
+            n_shards *= mesh.shape[a]
+        per_shard, rem = divmod(int(n_rows), n_shards)
+        if rem:
+            raise ValueError(
+                f"make_distributed_topk: {n_rows} rows do not shard evenly "
+                f"over {n_shards} devices ({shard_axes}); pad the corpus to "
+                f"a multiple of {n_shards} rows before sharding")
+        if engine == "stream" and per_shard % cfg.row_block:
+            raise ValueError(
+                f"make_distributed_topk: shard size {per_shard} is not a "
+                f"multiple of row_block={cfg.row_block} — the per-shard "
+                "streaming layout would pad the last block with phantom "
+                "zero rows, weakening every shard's exactness certificate "
+                "(DESIGN.md §4/§10).  Use a row_block that divides the "
+                f"shard size (e.g. {_aligned_row_block(per_shard, cfg.row_block)}) "
+                "or pad the corpus; the facade's mesh path auto-aligns")
     extra_state = dict(extra_state or {})
 
     def local_fn(x_lead, x_tail, lead_sq, tail_sq, q_lead, q_tail, q_extra):

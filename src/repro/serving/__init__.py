@@ -3,8 +3,13 @@
 ``ServingEngine`` is the continuous-batching loop for LM decode;
 ``SearchService`` applies the same fixed-slot pattern to vector search
 (batched single-query admission + the LSM-style delta write path,
-DESIGN.md §6).
+DESIGN.md §6).  ``ReplicatedService`` stacks the fault-tolerant replica
+tier on top — retry/backoff, hedged dispatch, breaker-gated routing, and
+shard-loss graceful degradation (DESIGN.md §10).
 """
 from repro.serving.engine import ServingEngine  # noqa: F401
+from repro.serving.replica import (REPLICA_MODES,  # noqa: F401
+                                   ReplicaDispatchError, ReplicaPolicy,
+                                   ReplicatedService, open_replicated)
 from repro.serving.search_service import (SearchRequest,  # noqa: F401
                                           SearchService)

@@ -246,6 +246,27 @@ class SearchService:
         self._p99_ewma = (p99 if self._p99_ewma is None
                           else 0.8 * self._p99_ewma + 0.2 * p99)
 
+    def _dispatch(self, Q, deadline_s):
+        """One device dispatch: run the session search on the padded batch
+        and return ``(result, service_wall_s)``.
+
+        This is the replica tier's override point (serving.replica,
+        DESIGN.md §10): ``ReplicatedService`` swaps in retry/hedge/fan-out
+        routing and a *virtual* wall (the simulated timeline of those
+        dispatches), while everything around it — ticket admission, padding,
+        timeout expiry, accounting — stays this class's.  A raised exception
+        fails the batch; raisers may attach ``wall_s`` to the exception to
+        charge the time the failure consumed."""
+        t0 = time.perf_counter()
+        res = self.session.search(Q, self.k, nprobe=self.nprobe,
+                                  deadline_s=deadline_s)
+        return res, time.perf_counter() - t0
+
+    def _visible_rows(self) -> int:
+        """Corpus rows visible to a batch served now (replica tier:
+        aggregate over shards)."""
+        return int(self.session.n)
+
     def step(self, *, now: float | None = None) -> list[SearchRequest]:
         """Serve ONE fixed-shape batch: resolve budget-expired queued
         requests as ``timeout``, pop up to ``slots`` survivors, pad to
@@ -277,10 +298,11 @@ class SearchService:
         deadline = max(min(budgets), 1e-4) if budgets else None
         t0 = time.perf_counter()
         try:
-            res = self.session.search(Q, self.k, nprobe=self.nprobe,
-                                      deadline_s=deadline)
+            res, wall = self._dispatch(Q, deadline)
         except Exception as exc:          # noqa: BLE001 — fail the batch,
-            wall = time.perf_counter() - t0   # not the service (DESIGN.md §7)
+            wall = getattr(exc, "wall_s", None)  # not the service (§7)
+            if wall is None:
+                wall = time.perf_counter() - t0
             t_done = (now + wall) if now is not None else self._clock()
             for req in batch:
                 req.status = "failed"
@@ -293,13 +315,12 @@ class SearchService:
             self.steps += 1
             self.busy_s += wall
             return resolved + batch
-        wall = time.perf_counter() - t0
         t_done = (now + wall) if now is not None else self._clock()
         mask = res.stats.extra.get(EXTRA_UNCERTIFIED_MASK)
         cov = res.stats.extra.get(EXTRA_COVERAGE)
         stats = {key: v for key, v in res.stats.extra.items()
                  if np.isscalar(v)}
-        n_visible = self.session.n
+        n_visible = self._visible_rows()
         for j, req in enumerate(batch):
             req.ids = res.ids[j]
             req.dists = res.dists[j]
@@ -371,4 +392,7 @@ class SearchService:
             h["drift_score"] = g["drift_score"]
             h["audit_recall"] = g["audit_recall"]
             h["demoted_batches"] = g["demoted_batches"]
+        wal = getattr(self.session, "wal", None)
+        if wal is not None:
+            h["wal_bytes"] = wal.total_bytes()
         return h

@@ -40,10 +40,20 @@ Hook points (all no-ops when no plan is active):
     replace the sentinel's measured drift score / the audit-or-canary
     sample recall, so breaker trips and audit divergence are injectable
     deterministically (the guardrail state-machine edge tests).
+``check_replica(plan, idx)`` / ``replica_delay(plan, idx)``
+    consulted by the replicated serving tier (serving.replica, DESIGN.md
+    §10) per replica dispatch — kill replica ``dead_replica`` (immediately,
+    or after its ``fail_replica_after``-th dispatch) and report an extra
+    simulated stall for replica ``slow_replica`` (charged to the virtual
+    timeline, never slept: failover replays stay fast and replay-exact).
+``check_save(plan)``
+    consulted by ``save_session`` between the tmp-file write and the atomic
+    ``os.replace`` — raises :class:`SimulatedCrash` on the armed save,
+    modeling power loss mid-snapshot (the old snapshot must survive).
 
 ``FaultPlan`` is a frozen dataclass (hashable, safe inside the frozen
 ``SchedulePolicy``); mutable runtime counters live module-side and reset
-whenever a new plan is installed via :func:`inject`.
+whenever a new plan is installed via :func:`inject` / :func:`install`.
 """
 from __future__ import annotations
 
@@ -81,6 +91,19 @@ class FaultPlan:
                             recall (0 <= r <= 1; -1.0 = no override) —
                             injects audit divergence without needing a
                             screen that actually loses neighbors.
+    ``dead_replica``        replica index whose dispatches raise
+                            ``FaultError`` (-1 = none).  Fails immediately
+                            unless ``fail_replica_after`` delays the onset.
+    ``fail_replica_after``  the dead replica serves this many dispatches
+                            first, then every later one fails (-1 = fail
+                            from the first dispatch) — the mid-run kill.
+    ``slow_replica``        replica index reporting an extra simulated
+                            stall per dispatch (-1 = none).
+    ``slow_replica_s``      the stall, in (virtual) seconds, charged to
+                            ``slow_replica``'s dispatch wall.
+    ``crash_save``          raise ``SimulatedCrash`` on save call number N
+                            (0-based), after the tmp write but before the
+                            atomic rename (-1 = never).
     """
 
     slow_block_s: float = 0.0
@@ -88,6 +111,11 @@ class FaultPlan:
     torn_frame_keep: float = -1.0
     drift_score: float = -1.0
     audit_recall: float = -1.0
+    dead_replica: int = -1
+    fail_replica_after: int = -1
+    slow_replica: int = -1
+    slow_replica_s: float = 0.0
+    crash_save: int = -1
 
 
 # module-side runtime state: the active global plan and mutable counters
@@ -127,6 +155,10 @@ def _reset(plan: FaultPlan) -> None:
     plan think it already fired."""
     _COUNTERS.pop(id(plan), None)
     _COUNTERS.pop(("torn", id(plan)), None)
+    _COUNTERS.pop(("save", id(plan)), None)
+    for key in [k for k in _COUNTERS
+                if isinstance(k, tuple) and k[:2] == ("replica", id(plan))]:
+        _COUNTERS.pop(key, None)
 
 
 @contextlib.contextmanager
@@ -143,6 +175,20 @@ def inject(**kw):
     finally:
         _GLOBAL = prev
         _reset(plan)
+
+
+def install(plan: FaultPlan | None) -> FaultPlan | None:
+    """Swap the process-global plan *without* a context scope and return the
+    previous one.  The failover benchmark uses this to kill and later revive
+    a replica at chosen points of a Poisson replay — a ``with`` block can't
+    straddle the replay loop.  Counters for the incoming plan are reset;
+    callers restore the returned plan when done."""
+    global _GLOBAL
+    prev = _GLOBAL
+    _GLOBAL = plan
+    if plan is not None:
+        _reset(plan)
+    return prev
 
 
 def sleep_block(plan: FaultPlan | None) -> None:
@@ -178,6 +224,49 @@ def audit_override(plan: FaultPlan | None, recall: float) -> float:
     if plan is None or plan.audit_recall < 0.0:
         return recall
     return float(plan.audit_recall)
+
+
+def check_replica(plan: FaultPlan | None, idx: int) -> None:
+    """Replica-tier hook: raise :class:`FaultError` when replica ``idx`` is
+    the plan's dead replica.  With ``fail_replica_after`` >= 0 the replica
+    serves that many dispatches first (the mid-run kill); unlike
+    ``check_search`` the failure is *persistent* — every dispatch after the
+    onset fails until the plan is swapped out (revival)."""
+    if plan is None or plan.dead_replica < 0 or idx != plan.dead_replica:
+        return
+    key = ("replica", id(plan), idx)
+    n = _COUNTERS.get(key, 0)
+    _COUNTERS[key] = n + 1
+    if plan.fail_replica_after < 0 or n >= plan.fail_replica_after:
+        raise FaultError(
+            f"injected replica failure: replica {idx} dead "
+            f"(dispatch {n}, FaultPlan.fail_replica_after="
+            f"{plan.fail_replica_after})")
+
+
+def replica_delay(plan: FaultPlan | None, idx: int) -> float:
+    """Replica-tier hook: extra *simulated* seconds to charge to replica
+    ``idx``'s dispatch wall (0.0 when not the slow replica).  Charged, not
+    slept — the hedged-dispatch timeline stays virtual and replay-exact."""
+    if plan is None or plan.slow_replica < 0 or idx != plan.slow_replica:
+        return 0.0
+    return float(max(plan.slow_replica_s, 0.0))
+
+
+def check_save(plan: FaultPlan | None) -> None:
+    """Persistence hook: raise :class:`SimulatedCrash` on the plan's
+    ``crash_save``-th snapshot save, after the tmp file is written but
+    before the atomic rename — the crash point the atomic-save test proves
+    leaves the previous snapshot intact."""
+    if plan is None or plan.crash_save < 0:
+        return
+    key = ("save", id(plan))
+    n = _COUNTERS.get(key, 0)
+    _COUNTERS[key] = n + 1
+    if n == plan.crash_save:
+        raise SimulatedCrash(
+            f"injected crash on save {n} (FaultPlan.crash_save="
+            f"{plan.crash_save}): tmp written, rename never happened")
 
 
 def torn_frame(plan: FaultPlan | None, buf: bytes) -> tuple[bytes, bool]:

@@ -122,6 +122,50 @@ print("DIST_OK")
     assert "DIST_OK" in r.stdout, r.stderr[-2000:]
 
 
+class _ShapeOnlyMesh:
+    """Enough mesh for make_distributed_topk's build-time validation (which
+    only reads ``mesh.shape``) — no devices needed to prove the fail-fast."""
+
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def test_distributed_topk_validates_shard_alignment():
+    """The mesh certificate sharp edge fails at BUILD time: shard sizes
+    that don't divide evenly, or aren't a row_block multiple (phantom
+    padding rows would weaken the streaming dropped-estimate certificate),
+    raise a named ValueError instead of silently degrading."""
+    from repro.core.jax_engine import DcoEngineConfig, make_distributed_topk
+    mesh = _ShapeOnlyMesh({"data": 4, "model": 2})
+    cfg = DcoEngineConfig(kind="lb", d1=16, k=10, row_block=64)
+    with pytest.raises(ValueError, match="do not shard evenly"):
+        make_distributed_topk(mesh, cfg, n_rows=903)     # 903 % 8 != 0
+    with pytest.raises(ValueError, match="row_block"):
+        make_distributed_topk(mesh, cfg, n_rows=8 * 96)  # 96 % 64 != 0
+    # success paths need a real mesh (shard_map construction checks it)
+    from repro.launch.mesh import make_host_mesh
+    real = make_host_mesh(1, 1)
+    # aligned rows build fine with the stream engine
+    make_distributed_topk(real, cfg, n_rows=128)
+    # the two_stage engine has no streaming certificate: only even split
+    # is required (no error for a 96-row shard under row_block=64)
+    make_distributed_topk(real, cfg, n_rows=96, engine="two_stage")
+    # n_rows=None preserves the old caller-beware behavior
+    make_distributed_topk(real, cfg, n_rows=None)
+
+
+def test_aligned_row_block_is_largest_safe_divisor():
+    from repro.core.jax_engine import _aligned_row_block
+    assert _aligned_row_block(96, 64) == 48      # largest divisor <= 64
+    assert _aligned_row_block(128, 64) == 64     # already aligned
+    assert _aligned_row_block(97, 64) == 1       # prime shard: worst case
+    assert _aligned_row_block(10, 64) == 10      # block larger than shard
+    for per_shard, rb in ((96, 64), (1000, 48), (7, 3)):
+        got = _aligned_row_block(per_shard, rb)
+        assert per_shard % got == 0 and 1 <= got <= rb
+
+
 def test_dco_attention_close_to_exact():
     from repro.serving.dco_attention import (dco_decode_attention,
                                              exact_decode_attention,

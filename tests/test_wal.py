@@ -291,6 +291,108 @@ def test_wal_without_snapshot_is_inert(tmp_path):
     assert not os.listdir(tmp_path)
 
 
+# ------------------------------------------------- atomic save crash points --
+def test_crash_mid_save_keeps_old_snapshot_and_wal(tmp_path):
+    """Kill the process between the tmp write and the atomic rename (the
+    worst point): the previous snapshot AND its delta frames must reload
+    intact — the failed save loses nothing."""
+    X, extra, Q = _data()
+    p = _snap(tmp_path)
+    sess = open_index(X, path=p)
+    sess.add(extra[:20])                     # acknowledged, in the WAL
+    with faults.inject(crash_save=0):
+        with pytest.raises(SimulatedCrash, match="rename never happened"):
+            sess.save(p)
+    re = SearchSession.load(p)               # old snapshot + WAL replay
+    assert re.n == X.shape[0] + 20
+    full = np.concatenate([X, extra[:20]])
+    oracle = np.argsort(((Q[:, None] - full[None]) ** 2).sum(-1), 1)[:, :5]
+    assert np.array_equal(np.sort(re.search(Q, 5).ids, 1),
+                          np.sort(oracle, 1))
+    # the tier heals: the next save lands atomically and absorbs the log
+    sess.save(p)
+    assert os.path.getsize(wal_path(p)) == 0
+    assert SearchSession.load(p).n == X.shape[0] + 20
+
+
+def test_crash_mid_save_before_any_wal_is_clean_slate(tmp_path):
+    """Crash on the very first save: no snapshot exists yet, and the load
+    error is the typed missing-file one, not a torn hybrid."""
+    X, _, _ = _data()
+    p = _snap(tmp_path)
+    sess = open_index(X)
+    with faults.inject(crash_save=0):
+        with pytest.raises(SimulatedCrash):
+            sess.save(p)
+    assert not os.path.exists(p)             # only the tmp file remains
+    with pytest.raises(IndexLoadError, match="does not exist"):
+        SearchSession.load(p)
+
+
+# ------------------------------------------------------- segment rotation ----
+def test_wal_rotation_splits_segments_and_replays_in_order(tmp_path):
+    """With ``wal_max_bytes`` set, appends past the cap open numbered
+    segments; replay walks them in order and reconstructs the corpus."""
+    X, extra, Q = _data()
+    p = _snap(tmp_path)
+    sess = open_index(X, path=p, schedule=SchedulePolicy(wal_max_bytes=1))
+    for i in range(3):                       # cap=1 byte: every add rotates
+        sess.add(extra[10 * i:10 * (i + 1)])
+    segs = sess.wal._segments()
+    assert segs == [wal_path(p), f"{wal_path(p)}.0001", f"{wal_path(p)}.0002"]
+    assert sess.wal.total_bytes() == sum(os.path.getsize(s) for s in segs)
+    re = SearchSession.load(p)
+    assert re.n == X.shape[0] + 30
+    assert np.array_equal(sess.search(Q, 5).ids, re.search(Q, 5).ids)
+
+
+def test_wal_rotation_clear_removes_every_segment(tmp_path):
+    X, extra, _ = _data()
+    p = _snap(tmp_path)
+    sess = open_index(X, path=p, schedule=SchedulePolicy(wal_max_bytes=1))
+    for i in range(3):
+        sess.add(extra[8 * i:8 * (i + 1)])
+    assert len(sess.wal._segments()) == 3
+    sess.save(p)                             # snapshot absorbs + clears
+    assert sess.wal._segments() == [wal_path(p)]
+    assert os.path.getsize(wal_path(p)) == 0
+    assert not [f for f in os.listdir(tmp_path)
+                if f.startswith("idx.bin.wal.")]
+    assert SearchSession.load(p).n == X.shape[0] + 24
+
+
+def test_wal_rotation_torn_tail_truncates_only_last_segment(tmp_path):
+    """A torn frame in the newest segment drops only that unacknowledged
+    tail; every rotated-out segment replays whole, and the post-recovery
+    append survives."""
+    X, extra, _ = _data()
+    p = _snap(tmp_path)
+    sess = open_index(X, path=p, schedule=SchedulePolicy(wal_max_bytes=1))
+    sess.add(extra[:8])
+    sess.add(extra[8:16])
+    with faults.inject(torn_frame_keep=0.5):
+        with pytest.raises(SimulatedCrash):
+            sess.add(extra[16:24])           # tears segment .0002
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        re = SearchSession.load(p)           # truncates the torn segment
+    assert any("torn" in str(x.message) for x in w)
+    assert re.n == X.shape[0] + 16
+    re.add(extra[16:20])
+    assert SearchSession.load(p).n == X.shape[0] + 20
+
+
+def test_wal_bytes_surfaces_in_serving_health(tmp_path):
+    X, extra, _ = _data()
+    p = _snap(tmp_path)
+    sess = open_index(X, path=p, schedule=SchedulePolicy(wal_max_bytes=1))
+    svc = sess.serve(slots=2, k=5)
+    svc.add(extra[:8])
+    svc.add(extra[8:16])
+    h = svc.health()
+    assert h["wal_bytes"] == sess.wal.total_bytes() > 0
+
+
 def test_frames_roundtrip_unit(tmp_path):
     """DeltaWAL alone: frames come back in order with exact payloads."""
     wal = DeltaWAL(tmp_path / "unit.wal")
